@@ -1,0 +1,58 @@
+"""Checkpoint-cost benchmark: C (Young/Daly's cost term) vs state size,
+sync vs async vs int8-compressed, plus the eq.-(1) optimal-period table."""
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CheckpointManager
+from repro.core.policy import SystemModel, young_daly_period
+
+
+def _state(mb: int):
+    n = mb * 1024 * 1024 // 4
+    k = jax.random.PRNGKey(0)
+    return {"params": {"w": jax.random.normal(k, (n,), jnp.float32)},
+            "step": jnp.asarray(3, jnp.int32)}
+
+
+def main() -> List[str]:
+    rows = []
+    print("# checkpoint cost C vs size")
+    for mb in (8, 32, 128):
+        state = _state(mb)
+        jax.block_until_ready(state["params"]["w"])
+        for codec, async_mode in [(None, False), (None, True), ("int8", True)]:
+            with tempfile.TemporaryDirectory() as d:
+                mgr = CheckpointManager(d, codec=codec)
+                t0 = time.perf_counter()
+                stats = mgr.save(1, state, blocking=not async_mode)
+                on_path = time.perf_counter() - t0   # BSP critical-path cost
+                mgr.wait()
+                total = time.perf_counter() - t0
+                name = f"ckpt_{mb}MB_{'int8' if codec else 'raw'}" \
+                       f"_{'async' if async_mode else 'sync'}"
+                print(f"{name}: critical-path={on_path*1e3:.1f}ms "
+                      f"total={total*1e3:.1f}ms bytes={stats.bytes_written or '-'}")
+                rows.append(f"{name},{on_path*1e6:.0f},total_ms={total*1e3:.2f}")
+
+    print("# Young/Daly optimal period (eq. 1), C from measured sync cost")
+    for nodes in (16, 256, 1024, 4096):
+        sysm = SystemModel(num_nodes=nodes)
+        for c in (5.0, 30.0, 120.0):
+            t = young_daly_period(sysm.system_mtbf, c, sysm.restart_seconds,
+                                  sysm.downtime_seconds)
+            print(f"young_daly nodes={nodes} C={c}s -> T_opt={t:.0f}s "
+                  f"({t/3600:.2f}h)")
+            rows.append(f"young_daly_n{nodes}_C{int(c)},{t*1e6:.0f},"
+                        f"hours={t/3600:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

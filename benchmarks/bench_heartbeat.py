@@ -1,0 +1,42 @@
+"""Heartbeat failure-detection latency vs heartbeat period (paper SII:
+deteccao por batimentos via UDP)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import HeartbeatEmitter, HeartbeatMonitor
+
+
+def main(trials: int = 3) -> List[str]:
+    rows = []
+    print("# heartbeat detection latency (UDP loopback)")
+    for period in (0.02, 0.05, 0.1):
+        lat = []
+        for _ in range(trials):
+            detected = {}
+            mon = HeartbeatMonitor(
+                num_hosts=2, period=period, timeout_factor=4.0,
+                on_failure=lambda h: detected.setdefault(h, time.time())
+            ).start()
+            ems = [HeartbeatEmitter(i, mon.addr, period).start()
+                   for i in range(2)]
+            time.sleep(8 * period)          # establish liveness
+            t_fail = time.time()
+            ems[1].pause()                  # fail-stop host 1
+            while 1 not in detected and time.time() - t_fail < 5:
+                time.sleep(period / 4)
+            lat.append(detected.get(1, time.time()) - t_fail)
+            for e in ems:
+                e.stop()
+            mon.stop()
+        mean = sum(lat) / len(lat)
+        print(f"period={period*1e3:.0f}ms: detect latency mean={mean*1e3:.0f}ms"
+              f" (timeout=4x)")
+        rows.append(f"heartbeat_p{int(period*1e3)}ms,{mean*1e6:.0f},"
+                    f"timeout_factor=4")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks: interpret-mode pallas vs pure-jnp oracle (CPU
+timings are NOT TPU performance — correctness + plumbing cost only; the
+TPU roofline lives in EXPERIMENTS.md S Roofline)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main() -> List[str]:
+    rows = []
+    k = jax.random.PRNGKey(0)
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    B, S, H, hd = 1, 512, 4, 64
+    q = jax.random.normal(k, (B, S, H, hd), jnp.float32)
+    kk = jax.random.normal(k, (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(k, (B, S, H, hd), jnp.float32)
+    t_int = _time(lambda *a: flash_attention(*a, block_q=128, block_k=128,
+                                             interpret=True), q, kk, v)
+    t_ref = _time(jax.jit(attention_ref), q, kk, v)
+    print(f"flash_attention S={S}: interpret={t_int:.0f}us ref={t_ref:.0f}us")
+    rows.append(f"kernel_flash_attention,{t_int:.0f},ref_us={t_ref:.0f}")
+
+    from repro.kernels.selective_scan.ops import selective_scan
+    from repro.kernels.selective_scan.ref import selective_scan_ref
+    Bq, Sq, Di, N = 1, 256, 128, 16
+    x = jax.random.normal(k, (Bq, Sq, Di))
+    dt = jax.nn.softplus(jax.random.normal(k, (Bq, Sq, Di))) * 0.1
+    bm = jax.random.normal(k, (Bq, Sq, N))
+    cm = jax.random.normal(k, (Bq, Sq, N))
+    a = -jnp.exp(jax.random.normal(k, (Di, N)) * 0.2)
+    h0 = jnp.zeros((Bq, Di, N))
+    t_int = _time(lambda *s: selective_scan(*s, interpret=True),
+                  x, dt, bm, cm, a, h0)
+    t_ref = _time(jax.jit(selective_scan_ref), x, dt, bm, cm, a, h0)
+    print(f"selective_scan S={Sq}: interpret={t_int:.0f}us ref={t_ref:.0f}us")
+    rows.append(f"kernel_selective_scan,{t_int:.0f},ref_us={t_ref:.0f}")
+
+    from repro.kernels.ckpt_codec.ops import quantize
+    from repro.kernels.ckpt_codec.ref import quantize_ref
+    xq = jax.random.normal(k, (1 << 20,))
+    t_int = _time(lambda s: quantize(s, interpret=True), xq)
+    t_ref = _time(jax.jit(quantize_ref), xq)
+    print(f"ckpt_codec 4MB: interpret={t_int:.0f}us ref={t_ref:.0f}us")
+    rows.append(f"kernel_ckpt_codec,{t_int:.0f},ref_us={t_ref:.0f}")
+
+    from repro.kernels.rmsnorm.ops import rms_norm
+    from repro.kernels.rmsnorm.ref import rms_norm_ref
+    xr = jax.random.normal(k, (1024, 1024), jnp.bfloat16)
+    w = jnp.ones((1024,), jnp.float32)
+    t_int = _time(lambda *s: rms_norm(*s, interpret=True), xr, w)
+    t_ref = _time(jax.jit(rms_norm_ref), xr, w)
+    print(f"rmsnorm 1Mx: interpret={t_int:.0f}us ref={t_ref:.0f}us")
+    rows.append(f"kernel_rmsnorm,{t_int:.0f},ref_us={t_ref:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows after each section's human-readable report.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    sections = []
+    from benchmarks import (bench_checkpoint, bench_heartbeat, bench_kernels,
+                            bench_overhead_fwi, bench_throughput)
+    suites = [
+        ("overhead_fwi (paper Fig.1-2, eq.2-3)", bench_overhead_fwi.main),
+        ("checkpoint cost + Young/Daly (eq.1)", bench_checkpoint.main),
+        ("heartbeat detection", bench_heartbeat.main),
+        ("kernels vs oracles", bench_kernels.main),
+        ("train-loop throughput", bench_throughput.main),
+    ]
+    all_rows = []
+    failed = 0
+    for name, fn in suites:
+        print(f"\n=== {name} ===", flush=True)
+        try:
+            rows = fn()
+            all_rows.extend(rows or [])
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+    print("\n=== CSV (name,us_per_call,derived) ===")
+    for r in all_rows:
+        print(r)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Preemption-safe training: termination-signal detection (paper SII).
+
+    PYTHONPATH=src python examples/preemption.py
+
+Phase 1 trains until a (self-sent) SIGUSR1 arrives — the scheduler's
+"you're about to be preempted" warning.  DeLIA latches the signal, takes a
+final checkpoint at the superstep boundary and exits cleanly.  Phase 2
+relaunches and resumes exactly where phase 1 stopped.
+"""
+import os
+import signal
+import tempfile
+
+import jax
+
+from repro.core import Dependability, DependabilityConfig, run_bsp
+from repro.data import make_pipeline
+from repro.models import get_config
+from repro.train import init_state, make_train_step
+
+
+def main():
+    cfg = get_config("gemma-7b", tiny=True)
+    steps = 30
+    step_fn = jax.jit(make_train_step(cfg, total_steps=steps))
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        def make_dep():
+            return Dependability(DependabilityConfig(
+                checkpoint_dir=ckpt_dir, policy_mode="every_n",
+                every_n=50,                 # rely on the FINAL save only
+                signal_detection=True)).start()
+
+        # ---- phase 1: preempted at step 9 ----
+        dep = make_dep()
+        data = make_pipeline(cfg, 64, 8)
+        dep.register_local_state(data)
+        state = init_state(cfg, jax.random.PRNGKey(0))
+
+        def maybe_preempt(step, rec):
+            if step == 9:
+                print(">>> scheduler sends SIGUSR1 (preemption warning)")
+                os.kill(os.getpid(), signal.SIGUSR1)
+
+        state, status, _ = run_bsp(dep, step_fn, state, data, steps,
+                                   on_metrics=maybe_preempt)
+        print(f"phase 1: {status} (cause={dep.interruption_cause()}); "
+              f"checkpoint at step {dep.manager.latest_step()}")
+        dep.stop()
+
+        # ---- phase 2: relaunch, resume ----
+        dep = make_dep()
+        data = make_pipeline(cfg, 64, 8)
+        dep.register_local_state(data)
+        template = jax.eval_shape(
+            lambda: init_state(cfg, jax.random.PRNGKey(0)))
+        state, got = dep.restore_latest(like=template)
+        print(f"phase 2: resumed from step {got}")
+        state, status, hist = run_bsp(dep, step_fn, state, data, steps)
+        print(f"phase 2: {status} at step {int(jax.device_get(state['step']))},"
+              f" final loss {[h['loss'] for h in hist][-1]:.4f}")
+        dep.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from repro.apps.fwi import (
+    FWIConfig,
+    forward_model,
+    make_fwi_step,
+    make_observed_data,
+    run_fwi,
+)
+
+__all__ = ["FWIConfig", "forward_model", "make_fwi_step",
+           "make_observed_data", "run_fwi"]

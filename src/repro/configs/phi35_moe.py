@@ -1,0 +1,40 @@
+"""phi3.5-moe-42b-a6.6b [moe] — 32L d=4096 32H (GQA kv=8) d_ff=6400
+vocab=32064.  MoE 16 experts top-2.  [hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+from repro.models.base import FULL, ModelConfig, register
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,
+    vocab_size=32064,
+    rope_theta=10000.0,
+    pattern=(FULL,),
+    mlp_act="silu",
+    num_experts=16,
+    experts_per_token=2,
+    tie_embeddings=False,
+    seq_shard=True,
+)
+
+TINY = ModelConfig(
+    name="phi3.5-moe-tiny",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=256,
+    pattern=(FULL,),
+    num_experts=4,
+    experts_per_token=2,
+    tie_embeddings=False,
+)
+
+register("phi3.5-moe-42b-a6.6b", CONFIG, TINY)

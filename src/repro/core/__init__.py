@@ -1,0 +1,41 @@
+"""repro.core — the paper's contribution: DeLIA-style dependability for
+iterative JAX applications (interruption detection + data preservation +
+fail-stop recovery around BSP supersteps)."""
+from repro.core.api import Dependability, DependabilityConfig
+from repro.core.checkpoint import CheckpointManager, SaveStats
+from repro.core.codec import CODECS, Int8BlockCodec
+from repro.core.coordinator import run_bsp, run_with_recovery
+from repro.core.elastic import (
+    largest_grid,
+    rescale_global_batch,
+    reshard_state,
+    survivor_mesh,
+)
+from repro.core.failures import FaultInjector, SimulatedFailure, StragglerWatchdog
+from repro.core.heartbeat import HeartbeatEmitter, HeartbeatMonitor
+from repro.core.policy import CheckpointPolicy, SystemModel, young_daly_period
+from repro.core.signals import TerminationSignal
+
+__all__ = [
+    "Dependability",
+    "DependabilityConfig",
+    "CheckpointManager",
+    "SaveStats",
+    "CODECS",
+    "Int8BlockCodec",
+    "run_bsp",
+    "run_with_recovery",
+    "survivor_mesh",
+    "reshard_state",
+    "rescale_global_batch",
+    "largest_grid",
+    "FaultInjector",
+    "SimulatedFailure",
+    "StragglerWatchdog",
+    "HeartbeatEmitter",
+    "HeartbeatMonitor",
+    "CheckpointPolicy",
+    "SystemModel",
+    "young_daly_period",
+    "TerminationSignal",
+]

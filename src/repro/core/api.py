@@ -1,0 +1,166 @@
+"""The Dependability facade — the DeLIAP/DeLIAJ-style interface, in JAX.
+
+Mirrors the paper's library surface:
+  register_global_state / register_local_state   (save-pointer registration)
+  should_checkpoint / save / restore_latest      (data preservation)
+  heartbeat monitoring + termination-signal detection (interruption
+  detection), exposed through ``interrupted()``.
+
+Typical BSP loop (see core/coordinator.py for the full runner)::
+
+    dep = Dependability(DependabilityConfig(checkpoint_dir=...)).start()
+    dep.register_local_state(data)
+    for step in ...:
+        if dep.interrupted():
+            dep.save(step, state, final=True); break
+        state, _ = train_step(state, batch)
+        dep.observe_step(dt)
+        if dep.should_checkpoint(step):
+            dep.save(step, state)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+from repro.core.checkpoint import CheckpointManager, SaveStats
+from repro.core.failures import StragglerWatchdog
+from repro.core.heartbeat import HeartbeatEmitter, HeartbeatMonitor
+from repro.core.policy import CheckpointPolicy, SystemModel
+from repro.core.signals import TerminationSignal
+
+
+@dataclasses.dataclass
+class DependabilityConfig:
+    checkpoint_dir: str
+    policy_mode: str = "young_daly"          # or "every_n"
+    every_n: int = 1
+    async_save: bool = False                  # paper-faithful default: sync
+    codec: Optional[str] = None               # "int8" for compressed ckpts
+    keep: int = 3
+    verify_crc: bool = True
+    heartbeat: bool = False
+    heartbeat_period: float = 0.05
+    heartbeat_timeout_factor: float = 5.0
+    signal_detection: bool = True
+    straggler_factor: float = 3.0
+    system: SystemModel = dataclasses.field(default_factory=SystemModel)
+
+
+class Dependability:
+    def __init__(self, config: DependabilityConfig, host_id: int = 0,
+                 num_hosts: int = 1):
+        self.config = config
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.manager = CheckpointManager(
+            config.checkpoint_dir, host_id=host_id, num_hosts=num_hosts,
+            codec=config.codec, verify_crc=config.verify_crc,
+            keep=config.keep)
+        self.policy = CheckpointPolicy(
+            mode=config.policy_mode, every_n=config.every_n,
+            system=config.system)
+        self.stragglers = StragglerWatchdog(factor=config.straggler_factor)
+        self.signals: Optional[TerminationSignal] = None
+        self.monitor: Optional[HeartbeatMonitor] = None
+        self.emitter: Optional[HeartbeatEmitter] = None
+        self._local_provider = None
+        self._global_template = None
+        self._global_shardings = None
+        self.save_history: list = []
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def start(self) -> "Dependability":
+        if self.config.signal_detection:
+            self.signals = TerminationSignal().install()
+        if self.config.heartbeat:
+            if self.host_id == 0:
+                self.monitor = HeartbeatMonitor(
+                    self.num_hosts, period=self.config.heartbeat_period,
+                    timeout_factor=self.config.heartbeat_timeout_factor
+                ).start()
+            addr = self.monitor.addr if self.monitor else ("127.0.0.1", 9)
+            self.emitter = HeartbeatEmitter(
+                self.host_id, addr, period=self.config.heartbeat_period
+            ).start()
+        return self
+
+    def stop(self) -> None:
+        self.manager.wait()
+        if self.emitter:
+            self.emitter.stop()
+        if self.monitor:
+            self.monitor.stop()
+        if self.signals:
+            self.signals.uninstall()
+
+    # ------------------------------------------------------------------
+    # registration (paper: save-pointer registration)
+    # ------------------------------------------------------------------
+    def register_global_state(self, template, shardings=None) -> None:
+        self._global_template = template
+        self._global_shardings = shardings
+
+    def register_local_state(self, provider) -> None:
+        """provider: object with state_dict() / load_state_dict()."""
+        self._local_provider = provider
+
+    # ------------------------------------------------------------------
+    # interruption detection
+    # ------------------------------------------------------------------
+    def interrupted(self) -> bool:
+        if self.signals is not None and self.signals.triggered():
+            return True
+        if self.monitor is not None and self.monitor.any_failure():
+            return True
+        return False
+
+    def interruption_cause(self) -> Optional[str]:
+        if self.signals is not None and self.signals.triggered():
+            return f"signal:{self.signals.received}"
+        if self.monitor is not None and self.monitor.any_failure():
+            return f"heartbeat:{self.monitor.failed_hosts()}"
+        return None
+
+    # ------------------------------------------------------------------
+    # data preservation
+    # ------------------------------------------------------------------
+    def observe_step(self, seconds: float, step: Optional[int] = None) -> bool:
+        self.policy.observe_step(seconds)
+        if step is not None:
+            return self.stragglers.observe(step, seconds)
+        return False
+
+    def should_checkpoint(self, step: int) -> bool:
+        return self.policy.should_checkpoint(step)
+
+    def save(self, step: int, state, *, blocking: Optional[bool] = None,
+             final: bool = False) -> SaveStats:
+        blocking = (not self.config.async_save) if blocking is None else blocking
+        if final:
+            blocking = True
+        local = (self._local_provider.state_dict()
+                 if self._local_provider is not None else None)
+        t0 = time.perf_counter()
+        stats = self.manager.save(step, state, local, blocking=blocking)
+        cost = time.perf_counter() - t0  # on-critical-path cost
+        self.policy.observe_checkpoint(cost)
+        self.policy.record_checkpoint(step)
+        self.save_history.append(stats)
+        return stats
+
+    def restore_latest(self, like=None, shardings=None,
+                       step: Optional[int] = None):
+        """Returns (state, step).  Reloads the registered local state."""
+        like = like if like is not None else self._global_template
+        shardings = (shardings if shardings is not None
+                     else self._global_shardings)
+        state, local = self.manager.restore(step=step, like=like,
+                                            shardings=shardings)
+        if local is not None and self._local_provider is not None:
+            self._local_provider.load_state_dict(local)
+        got_step = step if step is not None else self.manager.latest_step()
+        return state, got_step

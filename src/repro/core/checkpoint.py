@@ -1,0 +1,326 @@
+"""Sharded, atomic, resharding-on-restore checkpoint manager (from scratch).
+
+DeLIA mapping (DESIGN.md S2):
+- *global state*  = any pytree (TrainState): each host writes only its
+  addressable shards + metadata; restore can target ANY mesh/sharding
+  (elastic recovery) because the manifest records global shapes and every
+  shard's index span.
+- *local state*   = small JSON dict per host (data-pipeline cursor etc.).
+
+Layout (one directory per step):
+
+    <dir>/step_00000420/
+        manifest.json               global shapes/dtypes/codec/CRCs
+        <leaf-name>.s<k>.npy        shard k of that leaf (np .npy payload)
+        local_h<i>.json             per-host local state
+        ack_h<i>                    per-host completion marker
+    <dir>/step_00000420.tmp.<pid>   staging dir, atomically renamed
+
+Commit protocol: every host writes shards + ack into the staging dir; host 0
+renames it into place once all acks are present (single-process runs commit
+immediately).  A reader only trusts directories whose manifest parses and
+whose CRCs verify — a crash mid-write never corrupts the latest checkpoint.
+
+Async mode: ``save(..., blocking=False)`` snapshots device arrays to host
+memory (the only on-critical-path cost) and hands serialization to a writer
+thread (double-buffered: a new save drains the previous one).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import time
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.codec import CODECS, Codec
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return ".".join(parts)
+
+
+def _flatten_named(tree) -> List[Tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_leaf_name(p), v) for p, v in leaves]
+
+
+class SaveStats:
+    def __init__(self, step, bytes_written, snapshot_s, write_s, blocking):
+        self.step = step
+        self.bytes_written = bytes_written
+        self.snapshot_seconds = snapshot_s
+        self.write_seconds = write_s
+        self.blocking = blocking
+
+    def __repr__(self):
+        return (f"SaveStats(step={self.step}, MB={self.bytes_written/1e6:.1f},"
+                f" snapshot={self.snapshot_seconds:.3f}s,"
+                f" write={self.write_seconds:.3f}s, blocking={self.blocking})")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, host_id: int = 0, num_hosts: int = 1,
+                 codec: Optional[str] = None, verify_crc: bool = True,
+                 keep: int = 3):
+        self.directory = directory
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.codec: Optional[Codec] = CODECS[codec] if codec else None
+        self.codec_name = codec
+        self.verify_crc = verify_crc
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._writer: Optional[threading.Thread] = None
+        self._writer_err: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    # save
+    # ------------------------------------------------------------------
+    def _staging(self, step: int) -> str:
+        return os.path.join(self.directory,
+                            f"step_{step:08d}.tmp.{os.getpid()}")
+
+    def _final(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def _snapshot(self, tree):
+        """Device -> host copy.  This is the only cost on the BSP critical
+        path in async mode."""
+        named = _flatten_named(tree)
+        arrs = jax.device_get([v for _, v in named])
+        return [(n, np.asarray(a)) for (n, _), a in zip(named, arrs)]
+
+    def _shards_of(self, value):
+        """Addressable shards of a jax.Array (or a single numpy shard)."""
+        if isinstance(value, jax.Array) and hasattr(value, "addressable_shards"):
+            out = []
+            for sh in value.addressable_shards:
+                idx = sh.index  # tuple of slices into the global array
+                spans = [[s.start or 0,
+                          s.stop if s.stop is not None else dim]
+                         for s, dim in zip(idx, value.shape)] or []
+                out.append((sh.replica_id, spans, np.asarray(sh.data)))
+            # only keep replica 0 to avoid duplicate writes
+            return [(spans, data) for rid, spans, data in out if rid == 0]
+        arr = np.asarray(value)
+        spans = [[0, d] for d in arr.shape]
+        return [(spans, arr)]
+
+    def save(self, step: int, state, local_state: Optional[Dict] = None, *,
+             blocking: bool = True) -> SaveStats:
+        self.wait()  # double-buffer: drain previous async write
+        t0 = time.perf_counter()
+        named = _flatten_named(state)
+        shard_plan = []
+        manifest_arrays: Dict[str, Any] = {}
+        for name, value in named:
+            shards = self._shards_of(value)
+            dtype = str(np.asarray(shards[0][1]).dtype)
+            shape = list(np.shape(value))
+            entry = {"shape": shape, "dtype": dtype, "shards": []}
+            for k, (spans, data) in enumerate(shards):
+                fname = f"{name}.s{self.host_id}_{k}.npy"
+                entry["shards"].append({"file": fname, "spans": spans})
+                shard_plan.append((fname, data, entry["shards"][-1]))
+            manifest_arrays[name] = entry
+        snapshot_s = time.perf_counter() - t0
+
+        def write():
+            t1 = time.perf_counter()
+            staging = self._staging(step)
+            os.makedirs(staging, exist_ok=True)
+            total = 0
+            for fname, data, meta in shard_plan:
+                path = os.path.join(staging, fname)
+                payload = data
+                if self.codec is not None and payload.dtype in (
+                        np.float32, np.float64) and payload.size >= 1024:
+                    payload, codec_meta = self.codec.encode(payload)
+                    meta["codec"] = {"name": self.codec_name, **codec_meta}
+                with open(path, "wb") as f:
+                    np.save(f, payload)
+                    f.flush()
+                    os.fsync(f.fileno())
+                meta["crc32"] = zlib.crc32(payload.tobytes()) & 0xFFFFFFFF
+                total += payload.nbytes
+            manifest = {
+                "step": step,
+                "num_hosts": self.num_hosts,
+                "codec": self.codec_name,
+                "arrays": manifest_arrays,
+            }
+            with open(os.path.join(staging, f"manifest_h{self.host_id}.json"),
+                      "w") as f:
+                json.dump(manifest, f)
+            if local_state is not None:
+                with open(os.path.join(staging,
+                                       f"local_h{self.host_id}.json"), "w") as f:
+                    json.dump(local_state, f)
+            open(os.path.join(staging, f"ack_h{self.host_id}"), "w").close()
+            # commit when all hosts acked (single-process: immediately)
+            acks = [os.path.exists(os.path.join(staging, f"ack_h{h}"))
+                    for h in range(self.num_hosts)]
+            if all(acks) and self.host_id == 0:
+                final = self._final(step)
+                if os.path.exists(final):
+                    import shutil
+                    shutil.rmtree(final)
+                os.rename(staging, final)
+                self._gc()
+            return total, time.perf_counter() - t1
+
+        if blocking:
+            total, write_s = write()
+            return SaveStats(step, total, snapshot_s, write_s, True)
+
+        stats = SaveStats(step, 0, snapshot_s, 0.0, False)
+
+        def run():
+            try:
+                total, write_s = write()
+                stats.bytes_written = total
+                stats.write_seconds = write_s
+            except BaseException as e:  # surfaced on next wait()
+                self._writer_err = e
+
+        self._writer = threading.Thread(target=run, daemon=True)
+        self._writer.start()
+        return stats
+
+    def wait(self) -> None:
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+        if self._writer_err is not None:
+            err, self._writer_err = self._writer_err, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            import shutil
+            shutil.rmtree(self._final(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    # restore
+    # ------------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            m = _STEP_RE.match(d)
+            if m and os.path.exists(os.path.join(self.directory, d,
+                                                 "manifest_h0.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def _load_manifests(self, step: int) -> Dict[str, Any]:
+        final = self._final(step)
+        merged: Dict[str, Any] = {}
+        for h in range(self.num_hosts):
+            p = os.path.join(final, f"manifest_h{h}.json")
+            if not os.path.exists(p):
+                continue
+            with open(p) as f:
+                man = json.load(f)
+            for name, entry in man["arrays"].items():
+                if name not in merged:
+                    merged[name] = {"shape": entry["shape"],
+                                    "dtype": entry["dtype"], "shards": []}
+                merged[name]["shards"].extend(entry["shards"])
+        return merged
+
+    def _read_leaf(self, final: str, entry: Dict[str, Any]) -> np.ndarray:
+        shape = tuple(entry["shape"])
+        out: Optional[np.ndarray] = None
+        for sh in entry["shards"]:
+            path = os.path.join(final, sh["file"])
+            payload = np.load(path)
+            if self.verify_crc and "crc32" in sh:
+                crc = zlib.crc32(payload.tobytes()) & 0xFFFFFFFF
+                if crc != sh["crc32"]:
+                    raise IOError(f"CRC mismatch in {path}")
+            if "codec" in sh:
+                payload = CODECS[sh["codec"]["name"]].decode(
+                    payload, sh["codec"])
+            payload = payload.astype(entry["dtype"], copy=False)
+            spans = sh["spans"]
+            if not spans:  # scalar
+                return payload.reshape(shape)
+            if out is None:
+                out = np.empty(shape, dtype=entry["dtype"])
+            sl = tuple(slice(a, b) for a, b in spans)
+            out[sl] = payload.reshape(tuple(b - a for a, b in spans))
+        assert out is not None, entry
+        return out.reshape(shape)
+
+    def restore(self, *, step: Optional[int] = None, like=None,
+                shardings=None) -> Tuple[Any, Optional[Dict]]:
+        """Returns (state, local_state).
+
+        ``like``: template pytree (arrays or ShapeDtypeStructs) defining the
+        tree structure.  ``shardings``: matching pytree of Shardings (or
+        None -> numpy arrays) — may describe a DIFFERENT mesh than the one
+        that saved (elastic restore: reassembled from spans).
+        """
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        final = self._final(step)
+        merged = self._load_manifests(step)
+
+        def build(name: str, sharding=None):
+            arr = self._read_leaf(final, merged[name])
+            if sharding is None:
+                return arr
+            return jax.device_put(arr, sharding)
+
+        if like is None:
+            # rebuild a nested dict from dotted names
+            root: Dict[str, Any] = {}
+            for name in merged:
+                parts = name.split(".")
+                d = root
+                for p in parts[:-1]:
+                    d = d.setdefault(p, {})
+                d[parts[-1]] = build(name)
+            state = root
+        else:
+            named = _flatten_named(like)
+            flat_shardings = (jax.tree_util.tree_flatten_with_path(shardings)[0]
+                              if shardings is not None else None)
+            rebuilt = []
+            for i, (name, leaf) in enumerate(named):
+                if name not in merged:
+                    raise KeyError(f"leaf {name!r} missing from checkpoint "
+                                   f"{final}")
+                sh = flat_shardings[i][1] if flat_shardings is not None else None
+                rebuilt.append(build(name, sh))
+            state = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(like), rebuilt)
+
+        local = None
+        lp = os.path.join(final, f"local_h{self.host_id}.json")
+        if os.path.exists(lp):
+            with open(lp) as f:
+                local = json.load(f)
+        return state, local

@@ -1,0 +1,61 @@
+"""Checkpoint codecs: lossless passthrough and int8 block quantization.
+
+int8 halves (vs bf16) / quarters (vs fp32) checkpoint bytes -> the Young/Daly
+cost C drops by the same factor -> the optimal period shrinks by sqrt(ratio)
+and more checkpoints fit the same overhead budget (DESIGN.md S3/S4).
+
+Encoding is numpy-side (it runs in the writer thread, off the BSP critical
+path).  The Pallas kernel (repro/kernels/ckpt_codec) implements the same
+block layout for on-device quantization (gradient compression / snapshot
+shrinking before device_get); repro/optim/compress.py is its jnp twin.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+BLOCK = 256
+
+
+class Codec:
+    name = "base"
+
+    def encode(self, arr: np.ndarray) -> Tuple[np.ndarray, Dict[str, Any]]:
+        raise NotImplementedError
+
+    def decode(self, payload: np.ndarray, meta: Dict[str, Any]) -> np.ndarray:
+        raise NotImplementedError
+
+
+class Int8BlockCodec(Codec):
+    name = "int8"
+
+    def encode(self, arr: np.ndarray):
+        shape = arr.shape
+        flat = np.ascontiguousarray(arr, dtype=np.float32).reshape(-1)
+        pad = (-flat.size) % BLOCK
+        if pad:
+            flat = np.pad(flat, (0, pad))
+        blocks = flat.reshape(-1, BLOCK)
+        scale = np.abs(blocks).max(axis=1) / 127.0
+        safe = np.maximum(scale, 1e-12)
+        q = np.clip(np.rint(blocks / safe[:, None]), -127, 127).astype(np.int8)
+        # payload layout: int8 data blocks followed by fp32 scales (as bytes)
+        payload = np.concatenate(
+            [q.reshape(-1).view(np.uint8),
+             scale.astype(np.float32).view(np.uint8)])
+        return payload, {"shape": list(shape), "pad": int(pad),
+                         "blocks": int(blocks.shape[0])}
+
+    def decode(self, payload: np.ndarray, meta: Dict[str, Any]) -> np.ndarray:
+        nb = meta["blocks"]
+        q = payload[: nb * BLOCK].view(np.int8).reshape(nb, BLOCK)
+        scale = payload[nb * BLOCK:].view(np.float32)
+        flat = (q.astype(np.float32) * scale[:, None]).reshape(-1)
+        if meta["pad"]:
+            flat = flat[: -meta["pad"]]
+        return flat.reshape(meta["shape"])
+
+
+CODECS: Dict[str, Codec] = {"int8": Int8BlockCodec()}

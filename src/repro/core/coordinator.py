@@ -1,0 +1,95 @@
+"""BSP training coordinator: the paper's protected iterative loop.
+
+``run_bsp`` executes supersteps with interruption detection + data
+preservation at step boundaries.  ``run_with_recovery`` wraps it with
+fail-stop recovery: a (simulated or real) failure triggers restore from the
+last committed checkpoint and continuation — the end-to-end behaviour DeLIA
+provides to its host application.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core.api import Dependability
+from repro.core.failures import FaultInjector, SimulatedFailure
+
+
+def run_bsp(dep: Dependability, train_step: Callable, state, data,
+            num_steps: int, *, fault_injector: Optional[FaultInjector] = None,
+            on_metrics: Optional[Callable[[int, Dict], None]] = None,
+            final_save: bool = True) -> Tuple[Any, str, List[Dict]]:
+    """Runs supersteps until ``num_steps`` or interruption.
+
+    Returns (state, status, history); status in {"done", "interrupted"}.
+    """
+    history: List[Dict] = []
+    step = int(jax.device_get(state["step"]))
+    while step < num_steps:
+        if dep.interrupted():
+            if final_save:
+                dep.save(step, state, final=True)
+            return state, "interrupted", history
+
+        batch = data.next_batch()
+        t0 = time.perf_counter()
+        if fault_injector is not None:
+            # fail-stop / straggle strikes DURING the superstep
+            fault_injector.check(step + 1)     # may raise SimulatedFailure
+        state, metrics = train_step(state, batch)
+        metrics = jax.device_get(metrics)      # block: end of superstep
+        dt = time.perf_counter() - t0
+        step += 1
+
+        straggler = dep.observe_step(dt, step)
+        rec = {"step": step, "seconds": dt, "straggler": straggler,
+               **{k: float(v) for k, v in metrics.items()}}
+        history.append(rec)
+        if on_metrics:
+            on_metrics(step, rec)
+
+        if dep.should_checkpoint(step):
+            dep.save(step, state)
+    dep.manager.wait()
+    return state, "done", history
+
+
+def run_with_recovery(dep: Dependability, train_step: Callable, state, data,
+                      num_steps: int, *,
+                      fault_injector: Optional[FaultInjector] = None,
+                      max_restarts: int = 3,
+                      like=None, shardings=None,
+                      on_metrics=None) -> Tuple[Any, Dict]:
+    """Fail-stop recovery loop: restore-from-checkpoint on failure.
+
+    ``like``/``shardings`` describe the state pytree for restore (defaults to
+    the registered global template)."""
+    restarts = 0
+    all_history: List[Dict] = []
+    state0 = state                           # scratch-restart fallback
+    local0 = (dep._local_provider.state_dict()
+              if dep._local_provider is not None else None)
+    while True:
+        try:
+            state, status, hist = run_bsp(
+                dep, train_step, state, data, num_steps,
+                fault_injector=fault_injector, on_metrics=on_metrics)
+            all_history.extend(hist)
+            return state, {"status": status, "restarts": restarts,
+                           "history": all_history}
+        except SimulatedFailure as e:
+            all_history.append({"step": e.step, "event": f"failure:{e.kind}"})
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            dep.manager.wait()
+            try:
+                state, got = dep.restore_latest(like=like,
+                                                shardings=shardings)
+            except FileNotFoundError:
+                # failed before the first checkpoint: restart from scratch
+                state = state0
+                if local0 is not None:
+                    dep._local_provider.load_state_dict(local0)

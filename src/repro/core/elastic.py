@@ -1,0 +1,65 @@
+"""Elastic recovery: rebuild a mesh from survivors and reshard the latest
+checkpoint onto it.
+
+The checkpoint format stores global shapes + per-shard spans, so restore can
+target ANY mesh (fewer hosts after a fail-stop, more after a grow event).
+This implements DeLIA's "fault treatment" options (node exclusion /
+reallocation) for the JAX runtime.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.models.base import ModelConfig
+from repro.sharding.api import resolve
+from repro.sharding.rules import state_specs
+
+
+def largest_grid(n: int, model_axis: int) -> Tuple[int, int]:
+    """(data, model) grid using at most n devices, keeping the model axis."""
+    model = min(model_axis, n)
+    while n % model:
+        model -= 1
+    return (n // model, model)
+
+
+def survivor_mesh(failed_fraction_or_devices, model_axis: int = 1,
+                  axis_names=("data", "model")) -> Mesh:
+    """Builds a (data, model) mesh from surviving devices.
+
+    Accepts either an explicit device list or a number of failed devices to
+    exclude from ``jax.devices()``."""
+    if isinstance(failed_fraction_or_devices, (list, tuple)):
+        devices = list(failed_fraction_or_devices)
+    else:
+        devices = list(jax.devices())[: len(jax.devices())
+                                      - int(failed_fraction_or_devices)]
+    d, m = largest_grid(len(devices), model_axis)
+    grid = np.array(devices[: d * m]).reshape(d, m)
+    return Mesh(grid, axis_names)
+
+
+def reshard_state(manager, cfg: ModelConfig, mesh: Mesh, like,
+                  step: Optional[int] = None, moe_ep: bool = False):
+    """Restore the latest (or given) checkpoint onto ``mesh``.
+
+    Returns (state, local_state, step)."""
+    step = manager.latest_step() if step is None else step
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    specs = state_specs(cfg, tp, moe_ep)
+    shardings = jax.tree.map(lambda s: resolve(s, mesh), specs,
+                             is_leaf=lambda x: hasattr(x, "index") or
+                             x.__class__.__name__ == "PartitionSpec")
+    state, local = manager.restore(step=step, like=like, shardings=shardings)
+    return state, local, step
+
+
+def rescale_global_batch(global_batch: int, new_data_parallel: int) -> int:
+    """Keep per-replica batch constant when the DP width changes; round down
+    to a multiple of the new DP width."""
+    return max((global_batch // new_data_parallel) * new_data_parallel,
+               new_data_parallel)

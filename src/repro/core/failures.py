@@ -1,0 +1,77 @@
+"""Fail-stop fault injection + straggler watchdog.
+
+``FaultInjector`` simulates the paper's fault model for tests/examples: a
+scheduled fail-stop raises ``SimulatedFailure`` at a step boundary (the
+process "dies"); the harness then restarts from the last checkpoint exactly
+like a scheduler would relaunch the job.
+
+``StragglerWatchdog`` addresses slow-node ("fail-stutter") behaviour: it
+tracks step durations and flags steps slower than ``factor`` x the running
+median so the elastic layer can treat persistent stragglers as failures.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List, Optional, Set
+
+
+class SimulatedFailure(RuntimeError):
+    def __init__(self, step: int, host_id: int = 0, kind: str = "fail-stop"):
+        super().__init__(f"{kind} at step {step} on host {host_id}")
+        self.step = step
+        self.host_id = host_id
+        self.kind = kind
+
+
+class FaultInjector:
+    def __init__(self):
+        self._fail_at: Dict[int, int] = {}     # step -> host
+        self._slow_at: Dict[int, float] = {}   # step -> extra seconds
+        self.triggered: List[int] = []
+
+    def schedule_failstop(self, step: int, host_id: int = 0):
+        self._fail_at[step] = host_id
+        return self
+
+    def schedule_straggle(self, step: int, extra_seconds: float):
+        self._slow_at[step] = extra_seconds
+        return self
+
+    def check(self, step: int):
+        """Call at each BSP step boundary."""
+        if step in self._slow_at:
+            time.sleep(self._slow_at.pop(step))
+        if step in self._fail_at:
+            host = self._fail_at.pop(step)
+            self.triggered.append(step)
+            raise SimulatedFailure(step, host)
+
+
+class StragglerWatchdog:
+    def __init__(self, factor: float = 3.0, window: int = 32,
+                 min_samples: int = 5):
+        self.factor = factor
+        self.window = window
+        self.min_samples = min_samples
+        self.durations: List[float] = []
+        self.flagged_steps: List[int] = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        is_straggler = False
+        if len(self.durations) >= self.min_samples:
+            med = statistics.median(self.durations[-self.window:])
+            if seconds > self.factor * med:
+                is_straggler = True
+                self.flagged_steps.append(step)
+        self.durations.append(seconds)
+        if len(self.durations) > 4 * self.window:
+            self.durations = self.durations[-2 * self.window:]
+        return is_straggler
+
+    @property
+    def median(self) -> Optional[float]:
+        if not self.durations:
+            return None
+        return statistics.median(self.durations[-self.window:])

@@ -1,0 +1,141 @@
+"""UDP heartbeat monitoring (paper-faithful: DeLIA uses UDP for efficient
+liveness signaling).
+
+- ``HeartbeatEmitter``: thread sending ``{host_id, seq, t}`` datagrams every
+  ``period`` seconds to the monitor address.
+- ``HeartbeatMonitor``: thread receiving beats; declares a host FAILED when
+  no beat arrives within ``timeout = k * period`` (fail-stop detection) and
+  invokes ``on_failure(host_id)`` exactly once per failure.
+
+Paper limitation honored: a heartbeat only proves the emitter thread is
+alive ("garante somente o funcionamento da componente para envio dos
+batimentos") — the coordinator therefore also feeds ``progress_beat`` from
+the BSP loop so a wedged-but-alive process is distinguishable (beyond-paper
+strengthening, recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+
+class HeartbeatEmitter:
+    def __init__(self, host_id: int, monitor_addr, period: float = 0.1):
+        self.host_id = host_id
+        self.monitor_addr = monitor_addr
+        self.period = period
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+        self._stop = threading.Event()
+        self._seq = 0
+        self._thread: Optional[threading.Thread] = None
+        self._paused = threading.Event()
+
+    def start(self):
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def pause(self):
+        """Simulates fail-stop (the paper's fault model): beats just stop."""
+        self._paused.set()
+
+    def resume(self):
+        self._paused.clear()
+
+    def _run(self):
+        while not self._stop.is_set():
+            if not self._paused.is_set():
+                msg = json.dumps({"host": self.host_id, "seq": self._seq,
+                                  "t": time.time()}).encode()
+                try:
+                    self._sock.sendto(msg, self.monitor_addr)
+                except OSError:
+                    pass
+                self._seq += 1
+            time.sleep(self.period)
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2.0)
+        self._sock.close()
+
+
+class HeartbeatMonitor:
+    def __init__(self, num_hosts: int, period: float = 0.1,
+                 timeout_factor: float = 5.0,
+                 on_failure: Optional[Callable[[int], None]] = None,
+                 bind=("127.0.0.1", 0)):
+        self.num_hosts = num_hosts
+        self.period = period
+        self.timeout = timeout_factor * period
+        self.on_failure = on_failure
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+        self._sock.bind(bind)
+        self._sock.settimeout(period / 2)
+        self.addr = self._sock.getsockname()
+        self.last_seen: Dict[int, float] = {}
+        self.failed: Dict[int, float] = {}
+        self._stop = threading.Event()
+        self._threads = []
+        self._lock = threading.Lock()
+
+    def start(self):
+        t1 = threading.Thread(target=self._recv_loop, daemon=True)
+        t2 = threading.Thread(target=self._check_loop, daemon=True)
+        self._threads = [t1, t2]
+        t1.start()
+        t2.start()
+        return self
+
+    def _recv_loop(self):
+        while not self._stop.is_set():
+            try:
+                data, _ = self._sock.recvfrom(4096)
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            try:
+                msg = json.loads(data.decode())
+            except (ValueError, UnicodeDecodeError):
+                continue
+            with self._lock:
+                h = int(msg["host"])
+                self.last_seen[h] = time.time()
+                # a failed host beating again = recovered (failover/rejoin)
+                self.failed.pop(h, None)
+
+    def _check_loop(self):
+        while not self._stop.is_set():
+            now = time.time()
+            with self._lock:
+                for h, seen in list(self.last_seen.items()):
+                    if h in self.failed:
+                        continue
+                    if now - seen > self.timeout:
+                        self.failed[h] = now
+                        if self.on_failure:
+                            self.on_failure(h)
+            time.sleep(self.period / 2)
+
+    def alive_hosts(self):
+        with self._lock:
+            return sorted(h for h in self.last_seen if h not in self.failed)
+
+    def failed_hosts(self):
+        with self._lock:
+            return sorted(self.failed)
+
+    def any_failure(self) -> bool:
+        with self._lock:
+            return bool(self.failed)
+
+    def stop(self):
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=2.0)
+        self._sock.close()

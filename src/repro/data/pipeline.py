@@ -1,0 +1,84 @@
+"""Deterministic, checkpointable, per-host-sharded synthetic data pipeline.
+
+Every batch is a pure function of ``(seed, step, host_id)`` via counter-based
+threefry keys — no stateful iterators.  The *local state* in DeLIA terms is
+therefore a tiny cursor ``{"step": int}`` per host: O(1) save/restore with
+exact resume, which directly fixes the local-save limitation the paper hit
+with Julia's Distributed module (DESIGN.md S2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass
+class SyntheticLMData:
+    cfg: ModelConfig
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_id: int = 0
+    num_hosts: int = 1
+    step: int = 0
+
+    def __post_init__(self):
+        assert self.global_batch % self.num_hosts == 0, \
+            (self.global_batch, self.num_hosts)
+        self.host_batch = self.global_batch // self.num_hosts
+
+    # ---- DeLIA local state ----
+    def state_dict(self) -> Dict:
+        return {"step": int(self.step), "seed": int(self.seed),
+                "host_id": int(self.host_id)}
+
+    def load_state_dict(self, state: Dict) -> None:
+        assert int(state["seed"]) == self.seed, "seed mismatch on restore"
+        self.step = int(state["step"])
+
+    # ---- batches ----
+    def _key(self, step: int):
+        k = jax.random.PRNGKey(self.seed)
+        return jax.random.fold_in(jax.random.fold_in(k, step), self.host_id)
+
+    def peek_batch(self, step: Optional[int] = None) -> Dict:
+        """Batch for an arbitrary step (pure; does not advance the cursor)."""
+        step = self.step if step is None else step
+        key = self._key(step)
+        cfg = self.cfg
+        B, S = self.host_batch, self.seq_len
+        batch: Dict = {}
+        if cfg.embedding_inputs:
+            k1, k2 = jax.random.split(key)
+            batch["embeddings"] = jax.random.normal(
+                k1, (B, S, cfg.d_model), cfg.dtype) * 0.02
+            batch["targets"] = jax.random.randint(
+                k2, (B, S), 0, cfg.vocab_size, jnp.int32)
+        else:
+            toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size,
+                                      jnp.int32)
+            batch["tokens"] = toks[:, :-1]
+            batch["targets"] = toks[:, 1:]
+        if cfg.mrope_sections:
+            pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+            pos = jnp.broadcast_to(pos, (B, S))
+            batch["positions"] = jnp.broadcast_to(pos[None], (3, B, S))
+        return batch
+
+    def next_batch(self) -> Dict:
+        b = self.peek_batch()
+        self.step += 1
+        return b
+
+
+def make_pipeline(cfg: ModelConfig, seq_len: int, global_batch: int,
+                  seed: int = 0, host_id: int = 0, num_hosts: int = 1
+                  ) -> SyntheticLMData:
+    return SyntheticLMData(cfg, seq_len, global_batch, seed=seed,
+                           host_id=host_id, num_hosts=num_hosts)

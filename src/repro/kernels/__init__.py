@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel subpackage follows the required structure:
+  <name>/kernel.py  — pl.pallas_call + explicit BlockSpec VMEM tiling
+  <name>/ops.py     — jit'd public wrapper (layout handling, interpret switch)
+  <name>/ref.py     — pure-jnp oracle used by the allclose sweep tests
+
+Kernels (DESIGN.md S3):
+  flash_attention — blockwise online-softmax attention (causal / sliding
+                    window / soft-cap / GQA); MXU-tiled.
+  selective_scan  — Mamba-1 chunked selective scan, VMEM-resident state.
+  ckpt_codec      — int8 block quantize/dequantize (checkpoint & gradient
+                    compression: the paper-aligned kernel, shrinks the
+                    Young/Daly C term).
+  rmsnorm         — fused RMSNorm.
+
+All validated against their oracles in interpret mode on CPU (this container
+has no TPU); on TPU hardware the same pallas_call lowers natively.
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.ckpt_codec import kernel, ops, ref  # noqa: F401

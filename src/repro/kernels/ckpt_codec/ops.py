@@ -1,0 +1,39 @@
+"""Public codec wrapper: arbitrary-shape arrays <-> int8 blocks + scales."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ckpt_codec.kernel import (BLOCK, dequantize_blocks,
+                                             quantize_blocks)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize(x, *, interpret=None):
+    """x: any shape/float dtype -> (q (NB,BLOCK) int8, scales (NB,) f32,
+    static meta handled by caller via x.shape)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    q, s = quantize_blocks(blocks, interpret=interpret)
+    return q, s[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "interpret"))
+def dequantize(q, scales, shape, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    s = jnp.broadcast_to(scales[:, None], (scales.shape[0], 128))
+    y = dequantize_blocks(q, s, interpret=interpret).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return y[:n].reshape(shape)

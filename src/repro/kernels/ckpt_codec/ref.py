@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the int8 block codec (mirrors repro/optim/compress.py
+and repro/core/codec.py's numpy implementation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_ref(x):
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.abs(blocks).max(axis=1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)

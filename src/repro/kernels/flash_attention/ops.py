@@ -1,0 +1,33 @@
+"""Public flash-attention wrapper: (B,S,H,hd) layout, GQA, interpret switch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "q_offset", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, q_offset=0, block_q=256, block_k=512,
+                    interpret=None):
+    """q: (B,S,H,hd); k,v: (B,Skv,K,hd) -> (B,S,H,hd).
+
+    q_offset must be 0 (training/prefill); decode uses the jnp path."""
+    assert q_offset == 0, "kernel path is for training/prefill only"
+    interpret = _default_interpret() if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)   # (B,H,S,hd)
+    kt = jnp.swapaxes(k, 1, 2)   # (B,K,Sk,hd)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                             softcap=softcap, scale=scale, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)

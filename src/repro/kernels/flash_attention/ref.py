@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel: exact softmax attention
+with the same masking semantics (causal / window / softcap / GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+                  q_offset=0):
+    """q: (B,S,H,hd); k,v: (B,Skv,K,hd) -> (B,S,H,hd); fp32 softmax."""
+    B, S, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale else hd ** -0.5
+    qq = (q.astype(jnp.float32) * scale).reshape(B, S, K, G, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qq, k.astype(jnp.float32))
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qpos = (jnp.arange(S, dtype=jnp.int32) + q_offset)[:, None]
+    kpos = jnp.arange(Skv, dtype=jnp.int32)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window:
+        mask = mask & (qpos - kpos < window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)

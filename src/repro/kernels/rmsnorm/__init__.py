@@ -1,0 +1,1 @@
+from repro.kernels.rmsnorm import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,21 @@
+"""Public RMSNorm wrapper (arbitrary leading dims)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rms_norm_2d
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rms_norm(x, w, *, eps=1e-6, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    shape = x.shape
+    y = rms_norm_2d(x.reshape(-1, shape[-1]), w, eps=eps, interpret=interpret)
+    return y.reshape(shape)

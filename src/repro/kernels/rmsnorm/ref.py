@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm_ref(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,33 @@
+"""Public selective-scan wrapper."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.selective_scan.kernel import selective_scan_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "chunk", "interpret"))
+def selective_scan(x, dt, bm, cm, a, h0, *, block_c=512, chunk=128,
+                   interpret=None):
+    """Mamba-1 scan.  x,dt: (B,S,Di); bm,cm: (B,S,N); a: (Di,N); h0: (B,Di,N).
+    Returns (y, h_last), both fp32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, S, Di = x.shape
+    bc = block_c
+    while Di % bc:
+        bc //= 2
+    q = chunk
+    while S % q:
+        q //= 2
+    return selective_scan_kernel(
+        x.astype(jnp.float32), dt.astype(jnp.float32),
+        bm.astype(jnp.float32), cm.astype(jnp.float32),
+        a.astype(jnp.float32), h0.astype(jnp.float32),
+        block_c=bc, chunk=q, interpret=interpret)

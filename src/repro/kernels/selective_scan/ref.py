@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the selective scan: direct sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, bm, cm, a, h0):
+    """Same contract as ops.selective_scan; lax.scan over time steps."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, t):
+        x_t, dt_t, b_t, c_t = t
+        decay = jnp.exp(dt_t[..., None] * a)           # (B,Di,N)
+        h = decay * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    ts = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(cm.astype(jnp.float32), 1, 0))
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), ts)
+    return jnp.moveaxis(ys, 0, 1), h_last

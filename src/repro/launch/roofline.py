@@ -1,0 +1,305 @@
+"""Roofline analysis from the compiled dry-run (EXPERIMENTS.md S Roofline).
+
+Hardware model (TPU v5e-class, per assignment): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Methodology (probe-corrected accounting — see EXPERIMENTS.md for caveats):
+XLA's ``cost_analysis`` counts a ``lax.scan`` body ONCE, so the scanned
+production model under-reports by the trip count.  We therefore lower two
+UNROLLED probes per cell with exact-FLOPs einsum attention:
+
+    probe(L=0)     embed + head + loss (+ bwd)        [no layers]
+    probe(L=P)     one pattern block of layers, unrolled
+
+and linearly reconstruct:  total = L0 + (L/P) * (LP - L0).
+``cost_analysis`` is per-device post-SPMD, so terms divide by per-chip peaks
+directly (padding waste from uneven shardings is included, honestly).
+
+Train cells: the probe is the grads function (fwd+bwd, remat recompute
+included, grads pinned to param sharding) at the per-microbatch batch; a
+step = microbatches x probe + a closed-form AdamW/clip update term
+(elementwise over the local shard: ~25 flops and ~36 bytes per local param,
+no collectives).  Serve cells: the probe is the actual prefill/decode step.
+
+Collective wire bytes per device, parsed from the probe HLO:
+    all-reduce 2(G-1)/G x out ; all-gather (G-1)/G x out ;
+    reduce-scatter (G-1) x out ; all-to-all (G-1)/G x out ;
+    collective-permute 1 x out          (G = replica group size)
+collective term = wire_bytes / 50 GB/s (single-link, conservative).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, batch_sds, cache_sds, cell_applicable, \
+    params_sds, state_sds
+from repro.models import get_config
+from repro.models.base import ModelConfig
+from repro.sharding.api import mesh_context
+from repro.sharding.rules import state_specs
+from repro.train import make_decode_step, make_prefill_step
+from repro.train.step import loss_fn
+
+HW = {
+    "peak_flops": 197e12,     # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,          # bytes/s per chip
+    "ici_bw": 50e9,           # bytes/s per link
+}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\((%[\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective type (see module docstring).
+
+    CPU-backend correction: XLA:CPU lowers bf16 collectives as
+    convert(bf16->f32) -> collective(f32) -> convert back; on TPU these are
+    native bf16.  Collectives whose operand is a convert fusion are counted
+    at half the f32 bytes (their true bf16 wire size)."""
+    out: Dict[str, float] = {"all-reduce": 0.0, "all-gather": 0.0,
+                             "reduce-scatter": 0.0, "all-to-all": 0.0,
+                             "collective-permute": 0.0}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op, operand = m.group(1), m.group(2), m.group(3), \
+            m.group(4)
+        b = _shape_bytes(dtype, dims)
+        if dtype == "f32" and "convert" in operand:
+            b *= 0.5  # semantically a bf16 collective (see docstring)
+        g = None
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm2 = _GROUPS_EXPL_RE.search(line)
+            if gm2:
+                g = len(gm2.group(1).split(","))
+        g = g or 1
+        if op == "all-reduce":
+            wire = 2 * (g - 1) / g * b
+        elif op == "all-gather":
+            wire = (g - 1) / g * b
+        elif op == "reduce-scatter":
+            wire = (g - 1) * b
+        elif op == "all-to-all":
+            wire = (g - 1) / g * b
+        else:  # collective-permute
+            wire = b
+        out[op] += wire
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclasses.dataclass
+class ProbeCost:
+    flops: float
+    bytes: float
+    coll: Dict[str, float]
+
+    def __sub__(self, o):
+        return ProbeCost(self.flops - o.flops, self.bytes - o.bytes,
+                         {k: self.coll.get(k, 0) - o.coll.get(k, 0)
+                          for k in self.coll})
+
+    def scaled(self, f):
+        return ProbeCost(self.flops * f, self.bytes * f,
+                         {k: v * f for k, v in self.coll.items()})
+
+    def __add__(self, o):
+        return ProbeCost(self.flops + o.flops, self.bytes + o.bytes,
+                         {k: self.coll.get(k, 0) + o.coll.get(k, 0)
+                          for k in self.coll})
+
+
+def _probe_cfg(cfg: ModelConfig, layers: int) -> ModelConfig:
+    return dataclasses.replace(cfg, num_layers=layers, scan_layers=False,
+                               use_pallas=False)
+
+
+def _lower_probe(cfg: ModelConfig, shape_name: str, mesh, layers: int,
+                 microbatches: int, impl: str = "einsum") -> ProbeCost:
+    seq, batch, mode = SHAPES[shape_name]
+    pcfg = _probe_cfg(cfg, layers)
+    with mesh_context(mesh):
+        if mode == "train":
+            b = batch // microbatches
+            bt = batch_sds(pcfg, seq, b, mesh, "train")
+            st, _ = state_sds(pcfg, mesh)
+            pshard = jax.tree.map(lambda s: s.sharding, st["params"])
+
+            def grads_fn(params, batch):
+                (l, m), g = jax.value_and_grad(
+                    lambda p: loss_fn(pcfg, p, batch, impl=impl),
+                    has_aux=True)(params)
+                return l, g
+
+            comp = jax.jit(grads_fn, out_shardings=(None, pshard)).lower(
+                st["params"], bt).compile()
+        else:
+            bt = batch_sds(pcfg, seq, batch, mesh, mode)
+            pr, _ = params_sds(pcfg, mesh)
+            ca, ca_sh = cache_sds(pcfg, batch, seq, mesh)
+            fn = (make_prefill_step(pcfg, impl=impl) if mode == "prefill"
+                  else make_decode_step(pcfg, impl=impl))
+            comp = jax.jit(fn, out_shardings=(None, ca_sh)).lower(
+                pr, bt, ca).compile()
+    cost = comp.cost_analysis()
+    coll = parse_collectives(comp.as_text())
+    return ProbeCost(cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
+                     coll)
+
+
+def _local_param_count(cfg: ModelConfig, chips: int) -> float:
+    from repro.models import init_params
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    total = 0
+    for l in jax.tree.leaves(shapes):
+        n = 1
+        for d in l.shape:
+            n *= d
+        total += n
+    return total / chips
+
+
+def roofline_cell(arch: str, shape_name: str, *, microbatches: int = 1,
+                  multi_pod: bool = False,
+                  cfg_overrides: Optional[dict] = None,
+                  flash_mem: bool = False) -> Dict:
+    """``flash_mem=True``: take the memory term from blocked-attention
+    probes (the flash/VMEM-resident production path) instead of the
+    einsum probes (naive-attention baseline).  FLOPs and collectives always
+    come from the einsum probes (exact; attention is collective-free)."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    ok, reason = cell_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    seq, batch, mode = SHAPES[shape_name]
+    P = len(cfg.pattern)
+    L = cfg.num_layers
+    mb = microbatches if mode == "train" else 1
+
+    l0 = _lower_probe(cfg, shape_name, mesh, 0, mb)
+    lp = _lower_probe(cfg, shape_name, mesh, P, mb)
+    per_mb = l0 + (lp - l0).scaled(L / P)
+    total = per_mb.scaled(mb)
+
+    if flash_mem and not cfg.attention_free:
+        impl_b = "blocked_static" if mode == "train" else "blocked"
+        l0b = _lower_probe(cfg, shape_name, mesh, 0, mb, impl=impl_b)
+        lpb = _lower_probe(cfg, shape_name, mesh, P, mb, impl=impl_b)
+        per_mb_b = l0b + (lpb - l0b).scaled(L / P)
+        total = ProbeCost(total.flops,
+                          per_mb_b.scaled(mb).bytes, total.coll)
+
+    if mode == "train":
+        n_local = _local_param_count(cfg, chips)
+        total = total + ProbeCost(25.0 * n_local, 36.0 * n_local,
+                                  {"total": 0.0})
+
+    compute_s = total.flops / HW["peak_flops"]
+    memory_s = total.bytes / HW["hbm_bw"]
+    coll_s = total.coll["total"] / HW["ici_bw"]
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])[0]
+
+    # MODEL_FLOPS: 6 N D (train) / 2 N D (inference), N = active params
+    n_active = cfg.num_active_params()
+    tokens = batch * (1 if mode == "decode" else seq)
+    mf_coef = 6 if mode == "train" else 2
+    model_flops = mf_coef * n_active * tokens
+    hlo_flops_global = total.flops * chips
+    ratio = model_flops / max(hlo_flops_global, 1.0)
+
+    step_s = max(compute_s, memory_s, coll_s)
+    ideal_s = model_flops / (chips * HW["peak_flops"])
+    return {
+        "arch": arch, "shape": shape_name, "mode": mode, "status": "ok",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "microbatches": mb,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "flops_per_dev": total.flops, "bytes_per_dev": total.bytes,
+        "coll_bytes_per_dev": total.coll["total"],
+        "coll_breakdown": {k: v for k, v in total.coll.items()
+                           if k != "total" and v > 0},
+        "model_flops": model_flops,
+        "useful_flops_ratio": ratio,
+        "roofline_fraction": ideal_s / step_s if step_s else 0.0,
+    }
+
+
+def main(argv=None) -> int:
+    import argparse
+    from repro.configs import ALL_ARCHS
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    from repro.launch.dryrun import DEFAULT_MICROBATCHES, FALLBACK_MICROBATCHES
+    archs = [args.arch] if args.arch else list(ALL_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for arch in archs:
+        for shape in shapes:
+            mb = DEFAULT_MICROBATCHES.get(arch, FALLBACK_MICROBATCHES) \
+                if shape == "train_4k" else 1
+            try:
+                rec = roofline_cell(arch, shape, microbatches=mb)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "status": "fail",
+                       "error": str(e)[:500]}
+            if rec["status"] == "ok":
+                print(f"[roofline] {arch} x {shape}: "
+                      f"compute={rec['compute_s']*1e3:.2f}ms "
+                      f"memory={rec['memory_s']*1e3:.2f}ms "
+                      f"coll={rec['collective_s']*1e3:.2f}ms "
+                      f"dominant={rec['dominant']} "
+                      f"useful={rec['useful_flops_ratio']:.2f} "
+                      f"roofline={rec['roofline_fraction']*100:.1f}%",
+                      flush=True)
+            else:
+                print(f"[roofline] {arch} x {shape}: {rec['status']} "
+                      f"{rec.get('reason', rec.get('error', ''))[:120]}",
+                      flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    # run as: XLA_FLAGS=--xla_force_host_platform_device_count=512 \
+    #         PYTHONPATH=src python -m repro.launch.roofline --out r.jsonl
+    import sys
+    sys.exit(main())

@@ -1,0 +1,179 @@
+"""Assigned input-shape cells + ShapeDtypeStruct input specs per cell.
+
+LM-family shapes (per assignment):
+  train_4k      seq 4096,    global_batch 256   (train_step)
+  prefill_32k   seq 32768,   global_batch 32    (prefill)
+  decode_32k    seq 32768,   global_batch 128   (decode: 1 token, full cache)
+  long_500k     seq 524288,  global_batch 1     (decode; sub-quadratic only)
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs — no
+device allocation; the dry-run lowers against them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import init_cache, init_params
+from repro.models.base import BIDIR, FULL, ModelConfig
+from repro.sharding.api import resolve
+from repro.sharding.rules import DP_AXES, cache_specs, param_specs, state_specs
+from repro.train.state import init_state
+
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape_name: str
+                    ) -> Tuple[bool, Optional[str]]:
+    seq, batch, mode = SHAPES[shape_name]
+    if mode == "decode" and not cfg.has_decode:
+        return False, "encoder-only arch has no decode step"
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: 500k KV cache is infeasible "
+                       "(quadratic); see DESIGN.md S5")
+    return True, None
+
+
+def _dp_size(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("data", 1) * sizes.get("pod", 1)
+
+
+def _tp_size(mesh: Mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=resolve(spec, mesh) if mesh else None)
+
+
+def batch_sds(cfg: ModelConfig, seq: int, batch: int, mesh: Optional[Mesh],
+              mode: str) -> Dict:
+    """ShapeDtypeStructs for the input batch of one step."""
+    dp = _dp_size(mesh) if mesh else 1
+    bspec = DP_AXES if (batch % dp == 0 and dp > 1) else None
+    s = 1 if mode == "decode" else seq
+    out: Dict = {}
+    if cfg.embedding_inputs:
+        out["embeddings"] = _sds((batch, s, cfg.d_model), cfg.dtype, mesh,
+                                 P(bspec, None, None))
+    else:
+        out["tokens"] = _sds((batch, s), jnp.int32, mesh, P(bspec, None))
+    if mode == "train":
+        out["targets"] = _sds((batch, s), jnp.int32, mesh, P(bspec, None))
+    if cfg.mrope_sections:
+        out["positions"] = _sds((3, batch, s), jnp.int32, mesh,
+                                P(None, bspec, None))
+    return out
+
+
+def state_sds(cfg: ModelConfig, mesh: Optional[Mesh], moe_ep: bool = False):
+    """(ShapeDtypeStruct tree, sharding tree) for the TrainState."""
+    shapes = jax.eval_shape(lambda: init_state(cfg, jax.random.PRNGKey(0)))
+    if mesh is None:
+        return shapes, None
+    specs = state_specs(cfg, _tp_size(mesh), moe_ep)
+    shardings = jax.tree.map(lambda sp: resolve(sp, mesh), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    sds = jax.tree.map(
+        lambda sh, s: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=s),
+        shapes, shardings)
+    return sds, shardings
+
+
+# Serving keeps weights FSDP-sharded only when a TP shard of the bf16 model
+# would exceed this per-device budget; below it, weights replicate across DP
+# (zero per-layer gathers at inference — EXPERIMENTS.md S Perf).
+SERVE_FSDP_THRESHOLD_BYTES = 4 << 30
+
+
+def params_sds(cfg: ModelConfig, mesh: Optional[Mesh], moe_ep: bool = False,
+               serve_dtype=True):
+    """Param specs.  For serving (prefill/decode) weights are cast to the
+    compute dtype (bf16) — fp32 master copies are a training-only concern."""
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    if serve_dtype:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, cfg.dtype if s.dtype == jnp.float32 else s.dtype),
+            shapes)
+    if mesh is None:
+        return shapes, None
+    specs = param_specs(cfg, _tp_size(mesh), moe_ep)
+    if serve_dtype:
+        total = sum(int(np_prod(s.shape)) * s.dtype.itemsize
+                    for s in jax.tree.leaves(shapes))
+        if total / max(_tp_size(mesh), 1) < SERVE_FSDP_THRESHOLD_BYTES:
+            strip = lambda p: P(*(None if e == "data" else e for e in p))
+            specs = jax.tree.map(strip, specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+    shardings = jax.tree.map(lambda sp: resolve(sp, mesh), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    sds = jax.tree.map(
+        lambda sh, s: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=s),
+        shapes, shardings)
+    return sds, shardings
+
+
+def np_prod(shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def cache_sds(cfg: ModelConfig, batch: int, cache_len: int,
+              mesh: Optional[Mesh]):
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
+    if mesh is None:
+        return shapes, None
+    dp = _dp_size(mesh)
+    specs = cache_specs(cfg, _tp_size(mesh))
+
+    def fix_batch(spec, shape):
+        # replicate the batch dim when it doesn't divide DP (stacked cache
+        # entries have a leading layer-group dim, so scan all entries)
+        entries = list(spec)
+        for i, e in enumerate(entries):
+            if e == DP_AXES and i < len(shape) and shape[i] % dp != 0:
+                entries[i] = None
+        return P(*entries)
+
+    flat_sh = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_sp = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    assert len(flat_sh) == len(flat_sp)
+    shardings = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(shapes),
+        [resolve(fix_batch(sp, sh.shape), mesh)
+         for (_, sh), (_, sp) in zip(flat_sh, flat_sp)])
+    sds = jax.tree.map(
+        lambda sh, s: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=s),
+        shapes, shardings)
+    return sds, shardings
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh: Optional[Mesh],
+                moe_ep: bool = False):
+    """Returns (mode, args_sds, out_shardings_hint) for the cell's step fn."""
+    seq, batch, mode = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"cell not applicable: {reason}")
+    b = batch_sds(cfg, seq, batch, mesh, mode)
+    if mode == "train":
+        st, st_sh = state_sds(cfg, mesh, moe_ep)
+        return mode, (st, b), (st_sh, None)
+    pr, pr_sh = params_sds(cfg, mesh, moe_ep)
+    ca, ca_sh = cache_sds(cfg, batch, seq, mesh)
+    return mode, (pr, b, ca), (None, ca_sh)

@@ -1,0 +1,17 @@
+from repro.layers.norms import rms_norm
+from repro.layers.rope import apply_rope, apply_mrope
+from repro.layers.attention import mha, decode_mha
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.moe import moe_apply, moe_init
+
+__all__ = [
+    "rms_norm",
+    "apply_rope",
+    "apply_mrope",
+    "mha",
+    "decode_mha",
+    "mlp_apply",
+    "mlp_init",
+    "moe_apply",
+    "moe_init",
+]

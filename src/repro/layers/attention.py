@@ -1,0 +1,191 @@
+"""Attention: GQA/MQA multi-head attention with sliding-window, soft-capping,
+bidirectional (encoder) mode, KV-cache decode, and two implementations:
+
+- ``einsum``  : materializes the (S x S) score matrix.  Exact-FLOPs reference;
+                used by the roofline probes and by small shapes.
+- ``blocked`` : flash-style online-softmax over KV blocks with q blocking
+                (lax.map over q blocks, lax.fori_loop over kv blocks, causal /
+                window block skipping).  Memory-true path used by the scanned
+                production model; same algorithm the Pallas kernel implements.
+- ``pallas``  : the TPU Pallas kernel (see repro/kernels/flash_attention).
+
+All softmax math in fp32.  q: (B,S,H,hd); k,v: (B,Skv,K,hd) with H % K == 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -2.3819763e38  # large negative, safe in fp32
+
+
+def _softcap(logits, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(logits / cap) * cap
+    return logits
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int):
+    """Boolean mask (..., Sq, Sk): True = attend."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m = m & (kp <= qp)
+    if window and window > 0:
+        m = m & (qp - kp < window)
+    return m
+
+
+def _repeat_kv(k, G):
+    """(B,T,K,hd) -> (B,T,K*G,hd): keeps the head dim a single tensor axis so
+    TP sharding over heads propagates cleanly through the score einsums
+    (a 5-D (K,G) split makes GSPMD pick mixed shardings and replicate)."""
+    if G == 1:
+        return k
+    B, T, K, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, T, K, G, hd)) \
+        .reshape(B, T, K * G, hd)
+
+
+def mha_einsum(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+               q_offset=0):
+    """Operands stay in the compute dtype (bf16 on TPU) with fp32 MXU
+    accumulation + fp32 softmax — keeps attention's HBM/ICI traffic at
+    2 bytes/elt instead of promoting everything to fp32."""
+    B, S, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale else hd ** -0.5
+    qq = q * jnp.asarray(scale, q.dtype)
+    kk = _repeat_kv(k, G)
+    vv = _repeat_kv(v, G)
+    logits = jnp.einsum("bshd,bthd->bhst", qq, kk,
+                        preferred_element_type=jnp.float32)
+    logits = _softcap(logits, softcap)
+    q_pos = jnp.arange(S, dtype=jnp.int32) + q_offset
+    k_pos = jnp.arange(Skv, dtype=jnp.int32)
+    m = _mask(q_pos, k_pos, causal=causal, window=window)  # (S,Skv)
+    logits = jnp.where(m[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhst,bthd->bshd", p, vv,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def mha_blocked(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+                q_offset=0, block_q=512, block_k=1024, static_bounds=False):
+    """``static_bounds=True`` visits every kv block (masked) so the loop has
+    static trip counts — required for reverse-mode AD (training) and for the
+    roofline probes; the dynamic-bounds default skips fully-masked blocks
+    (inference)."""
+    B, S, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale else hd ** -0.5
+    block_q = min(block_q, S)
+    block_k = min(block_k, Skv)
+    if S % block_q or Skv % block_k:
+        # fall back for ragged shapes (only tiny test configs hit this)
+        return mha_einsum(q, k, v, causal=causal, window=window,
+                          softcap=softcap, scale=scale, q_offset=q_offset)
+    nq, nk = S // block_q, Skv // block_k
+    kr = k.reshape(B, nk, block_k, K, hd)
+    vr = v.reshape(B, nk, block_k, K, hd)
+
+    def per_q_block(i):
+        qi = lax.dynamic_slice_in_dim(q, i * block_q, block_q, axis=1)
+        qi = qi * jnp.asarray(scale, q.dtype)          # (B,bq,H,hd)
+        q_lo = q_offset + i * block_q
+        q_pos = jnp.arange(block_q, dtype=jnp.int32) + q_lo
+        if static_bounds:
+            lo, hi = 0, nk
+        else:
+            if causal:
+                hi = jnp.minimum((q_lo + block_q + block_k - 1) // block_k, nk)
+            else:
+                hi = nk
+            if window and window > 0:
+                lo = jnp.maximum((q_lo - window + 1) // block_k, 0)
+            else:
+                lo = 0
+
+        m0 = jnp.full((B, block_q, H), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, block_q, H), jnp.float32)
+        a0 = jnp.zeros((B, block_q, H, hd), jnp.float32)
+
+        def body(j, carry):
+            m, l, acc = carry
+            kj = _repeat_kv(kr[:, j], G)                       # (B,bk,H,hd)
+            vj = _repeat_kv(vr[:, j], G)
+            logits = jnp.einsum("bshd,bthd->bsht", qi, kj,
+                                preferred_element_type=jnp.float32)
+            logits = _softcap(logits, softcap)
+            k_pos = jnp.arange(block_k, dtype=jnp.int32) + j * block_k
+            msk = _mask(q_pos, k_pos, causal=causal, window=window)  # (bq,bk)
+            logits = jnp.where(msk[None, :, None, :], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + \
+                jnp.einsum("bsht,bthd->bshd", p.astype(vj.dtype), vj,
+                           preferred_element_type=jnp.float32)
+            return m_new, l_new, acc_new
+
+        m, l, acc = lax.fori_loop(lo, hi, body, (m0, l0, a0))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out
+
+    blocks = lax.map(per_q_block, jnp.arange(nq))       # (nq,B,bq,H,hd)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def mha(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+        q_offset=0, impl="auto"):
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as _fa
+
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   q_offset=q_offset)
+    if impl == "auto":
+        impl = "blocked" if q.shape[1] * k.shape[1] > 4096 * 4096 else "einsum"
+    if impl == "blocked_static":
+        return mha_blocked(q, k, v, causal=causal, window=window,
+                           softcap=softcap, scale=scale, q_offset=q_offset,
+                           static_bounds=True)
+    fn = mha_blocked if impl == "blocked" else mha_einsum
+    return fn(q, k, v, causal=causal, window=window, softcap=softcap,
+              scale=scale, q_offset=q_offset)
+
+
+def decode_mha(q, k_cache, v_cache, cache_pos, cur_pos, *, window=0,
+               softcap=0.0, scale=None):
+    """Single-token decode attention against a (possibly rolling) KV cache.
+
+    q: (B,1,H,hd); k_cache/v_cache: (B,Sc,K,hd);
+    cache_pos: (Sc,) int32 — absolute position stored in each slot (-1 empty);
+    cur_pos: scalar int32 — absolute position of the query token.
+    """
+    B, _, H, hd = q.shape
+    Sc, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = scale if scale else hd ** -0.5
+    qq = (q * jnp.asarray(scale, q.dtype)).reshape(B, K, G, hd)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qq, k_cache,
+                        preferred_element_type=jnp.float32)
+    logits = _softcap(logits, softcap)
+    ok = (cache_pos >= 0) & (cache_pos <= cur_pos)
+    if window and window > 0:
+        ok = ok & (cur_pos - cache_pos < window)
+    logits = jnp.where(ok[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

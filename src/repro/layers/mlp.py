@@ -1,0 +1,48 @@
+"""Gated / plain MLP blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.api import U, constrain
+from repro.sharding.rules import DP_AXES, TP
+
+
+def _act(name: str):
+    if name in ("silu", "swish"):
+        return jax.nn.silu
+    if name in ("gelu", "gelu_plain"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype):
+    gated = act in ("silu", "gelu")
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    p = {
+        "w_in": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp_apply(params, x, act: str, compute_dtype):
+    gated = act in ("silu", "gelu")
+    fn = _act(act)
+    h = x @ params["w_in"].astype(compute_dtype)
+    if gated:
+        g = x @ params["w_gate"].astype(compute_dtype)
+        h = fn(g) * h
+    else:
+        h = fn(h)
+    # Pin the hidden to TP sharding: the transpose pins the COTANGENT too,
+    # keeping the backward dx = dh @ w_out^T contraction aligned with
+    # w_out's "model" sharding (otherwise GSPMD all-gathers the full weight
+    # in the remat-backward region — EXPERIMENTS.md S Perf).
+    h = constrain(h, P(DP_AXES, U, TP))
+    return h @ params["w_out"].astype(compute_dtype)

@@ -1,0 +1,102 @@
+"""Top-k Mixture-of-Experts with capacity-bounded scatter dispatch.
+
+FLOPs-honest: expert compute is ``B * E * C * (...)`` with
+``C = ceil(S * k / E * capacity_factor)`` — i.e. ~``capacity_factor`` x the
+active-expert FLOPs, never the dense all-experts product.  Dispatch/combine
+are scatter/gather (no T x E x C one-hot matmuls).
+
+Token -> slot routing is computed independently per batch row so every op
+keeps the batch dim leading and data-parallel sharding propagates untouched.
+For decode (S == 1) the batch dim itself is treated as the token axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.api import U, constrain
+from repro.sharding.rules import DP_AXES, TP
+
+
+def moe_init(key, d_model: int, d_ff: int, num_experts: int, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "router": (jax.random.normal(k1, (d_model, num_experts)) * s_in
+                   ).astype(jnp.float32),
+        "w_in": (jax.random.normal(k2, (num_experts, d_model, d_ff)) * s_in
+                 ).astype(dtype),
+        "w_gate": (jax.random.normal(k3, (num_experts, d_model, d_ff)) * s_in
+                   ).astype(dtype),
+        "w_out": (jax.random.normal(k4, (num_experts, d_ff, d_model)) * s_out
+                  ).astype(dtype),
+    }
+
+
+def _capacity(tokens: int, num_experts: int, k: int, cf: float) -> int:
+    c = -(-tokens * k * cf // num_experts)
+    return max(int(c), 1)
+
+
+def moe_apply(params, x, *, num_experts: int, k: int, capacity_factor: float,
+              act, compute_dtype, ep: bool = False):
+    """x: (B, S, D) -> (B, S, D).  Aux loss returned for load balancing."""
+    B, S, D = x.shape
+    decode = S == 1
+    if decode:
+        # fold batch into the token axis; single "row"
+        x = x.reshape(1, B, D)
+        B, S = 1, B
+    E = num_experts
+    C = _capacity(S, E, k, capacity_factor)
+
+    router = params["router"].astype(jnp.float32)
+    logits = x.astype(jnp.float32) @ router                    # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)                   # (B,S,k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    ce = jax.nn.one_hot(gate_i[..., 0], E).mean(axis=(0, 1))
+    aux_loss = E * jnp.sum(me * ce)
+
+    # ---- slot assignment, per batch row ----
+    T = S * k
+    fe = gate_i.reshape(B, T)                                  # expert of each copy
+    fw = gate_w.reshape(B, T)
+    oh = jax.nn.one_hot(fe, E, dtype=jnp.int32)                # (B,T,E)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=1), fe[..., None],
+                              axis=2)[..., 0] - 1              # (B,T)
+    keep = pos < C
+    dest = jnp.where(keep, fe * C + pos, E * C)                # overflow slot
+
+    xs = jnp.repeat(x, k, axis=1)                              # (B,T,D)
+    brow = jnp.arange(B)[:, None]
+    slots = jnp.zeros((B, E * C + 1, D), x.dtype).at[brow, dest].add(
+        jnp.where(keep[..., None], xs, 0))
+    xe = slots[:, : E * C].reshape(B, E, C, D)
+    xe = constrain(xe, P(DP_AXES, TP if ep else U, U, U))
+
+    # ---- expert computation (TP over d_ff, or EP over experts) ----
+    w_in = params["w_in"].astype(compute_dtype)
+    w_gate = params["w_gate"].astype(compute_dtype)
+    w_out = params["w_out"].astype(compute_dtype)
+    h = jnp.einsum("becd,edf->becf", xe.astype(compute_dtype), w_in)
+    g = jnp.einsum("becd,edf->becf", xe.astype(compute_dtype), w_gate)
+    h = act(g) * h
+    h = constrain(h, P(DP_AXES, TP if ep else U, U, TP if not ep else U))
+    ye = jnp.einsum("becf,efd->becd", h, w_out)                # (B,E,C,D)
+
+    # ---- combine ----
+    flat = jnp.concatenate(
+        [ye.reshape(B, E * C, D),
+         jnp.zeros((B, 1, D), ye.dtype)], axis=1)              # (B,E*C+1,D)
+    back = jnp.take_along_axis(flat, dest[..., None], axis=1)  # (B,T,D)
+    back = back * (fw * keep)[..., None]
+    y = back.reshape(B, S, k, D).sum(axis=2)
+    if decode:
+        y = y.reshape(S, 1, D)
+    return y.astype(compute_dtype), aux_loss

@@ -1,0 +1,19 @@
+"""Normalization layers (fp32 accumulation, cast back to compute dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float = 1e-6, *, use_pallas: bool = False):
+    """RMSNorm: x * w / rms(x).  ``weight`` follows the (1+w) gemma convention
+    when initialized to zeros; standard convention when initialized to ones —
+    we use the standard convention (init to ones) everywhere."""
+    if use_pallas:
+        from repro.kernels.rmsnorm import ops as _ops
+
+        return _ops.rms_norm(x, weight, eps=eps)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * weight.astype(jnp.float32)).astype(dtype)

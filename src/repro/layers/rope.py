@@ -1,0 +1,61 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL multi-axis M-RoPE.
+
+Convention: "rotate half" over contiguous halves of head_dim (llama/gemma
+style).  All trig in fp32.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) int -> cos/sin (..., S, head_dim//2) fp32."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x, cos, sin):
+    """x (B,S,H,hd); cos/sin (B,S,hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]  # (B,S,1,half)
+    sin = sin[..., None, :]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x (B,S,H,hd), positions (B,S) int32."""
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)
+    return _rotate(x, cos, sin)
+
+
+def apply_mrope(x, positions, sections: Sequence[int], theta: float = 10000.0):
+    """Qwen2-VL multi-axis RoPE.
+
+    positions: (3, B, S) — temporal / height / width position ids.
+    sections: sizes over head_dim//2 per axis (sum == head_dim//2).
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    cos3, sin3 = _rope_angles(positions, x.shape[-1], theta)  # (3,B,S,half)
+    chunks_c, chunks_s = [], []
+    start = 0
+    for i, sec in enumerate(sections):
+        chunks_c.append(cos3[i, ..., start : start + sec])
+        chunks_s.append(sin3[i, ..., start : start + sec])
+        start += sec
+    cos = jnp.concatenate(chunks_c, axis=-1)
+    sin = jnp.concatenate(chunks_s, axis=-1)
+    return _rotate(x, cos, sin)
+
+
+def make_positions(batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))

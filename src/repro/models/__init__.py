@@ -1,0 +1,27 @@
+from repro.models.base import (
+    BIDIR,
+    FULL,
+    LOCAL,
+    REC,
+    SSM,
+    ModelConfig,
+    get_config,
+    list_archs,
+    register,
+)
+from repro.models.transformer import forward, init_cache, init_params
+
+__all__ = [
+    "ModelConfig",
+    "get_config",
+    "list_archs",
+    "register",
+    "forward",
+    "init_cache",
+    "init_params",
+    "FULL",
+    "LOCAL",
+    "BIDIR",
+    "SSM",
+    "REC",
+]

@@ -1,0 +1,181 @@
+"""Mamba-1 selective-SSM layer (falcon-mamba-7b family).
+
+Recurrence: ``h_t = exp(dt_t A) h_{t-1} + (dt_t B_t) x_t``;  ``y_t = C_t . h_t
++ D x_t`` with diagonal A, per-channel dt.  Training/prefill uses a chunked
+associative scan (chunk = ``SCAN_CHUNK``): only (B, Q, Di, N) is live per
+chunk, (B, nchunks, Di, N) across chunks — TPU-native adaptation of the CUDA
+fused scan (see DESIGN.md).  Decode is a single fused recurrence step.
+
+The projections dominate FLOPs (>99%); the recurrence is elementwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.norms import rms_norm
+from repro.sharding.api import U, constrain
+from repro.sharding.rules import DP_AXES, TP, gathered, res_spec
+
+SCAN_CHUNK = 128
+
+
+def ssm_init(key, cfg):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, w = cfg.resolved_dt_rank, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (w, di)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": (jax.random.normal(ks[2], (di, dtr + 2 * n)) * di ** -0.5).astype(dt),
+        "dt_w": (jax.random.normal(ks[3], (dtr, di)) * dtr ** -0.5).astype(dt),
+        "dt_b": jnp.full((di,), -4.6, dt),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))).astype(dt),
+        "D": jnp.ones((di,), dt),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * di ** -0.5).astype(dt),
+    }
+
+
+def _causal_conv(x, conv_w, conv_b, state=None):
+    """Depthwise causal conv over time via shifted adds.
+
+    x: (B,S,C); conv_w: (W,C).  With ``state`` (B,W-1,C) prepended (decode /
+    chunk streaming), returns (y, new_state)."""
+    W = conv_w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for w in range(W):
+        y = y + xp[:, w : w + S].astype(jnp.float32) * conv_w[w].astype(jnp.float32)
+    y = (y + conv_b.astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, S : S + W - 1] if S >= W - 1 else xp[:, -(W - 1):]
+    return y, new_state
+
+
+def _chunks(x, nc, Q):
+    """(B,S,...) -> (nc,B,Q,...) for lax.scan over chunks."""
+    Bd = x.shape[0]
+    return jnp.moveaxis(x.reshape((Bd, nc, Q) + x.shape[2:]), 1, 0)
+
+
+def _comb(l, r):
+    al, bl = l
+    ar_, br_ = r
+    return al * ar_, bl * ar_ + br_
+
+
+def _scan_chunked(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t over axis 1.  a,b: (B,S,...) fp32.
+    Returns (h_all (B,S,...), h_last).  sqrt-memory: outer lax.scan over
+    chunks with a rematerialized (jax.checkpoint) chunk body; only per-chunk
+    carries persist in the backward pass."""
+    Bd, S = a.shape[0], a.shape[1]
+    Q = min(SCAN_CHUNK, S)
+    if S % Q:
+        Q = S  # tiny/odd shapes: single chunk
+    nc = S // Q
+
+    @jax.checkpoint
+    def chunk(h, ab):
+        ac, bc = ab  # (B,Q,...)
+        bc0 = bc.at[:, 0].add(ac[:, 0] * h)
+        _, hh = lax.associative_scan(_comb, (ac, bc0), axis=1)
+        return hh[:, -1], hh
+
+    h_last, h_all = lax.scan(chunk, h0, (_chunks(a, nc, Q), _chunks(b, nc, Q)))
+    h_all = jnp.moveaxis(h_all, 0, 1).reshape((Bd, S) + a.shape[2:])
+    return h_all, h_last
+
+
+def _ssm_chunked(dt, xf, bm, cm, A, h0):
+    """Memory-lean Mamba scan: never materializes (B,S,Di,N).
+
+    dt, xf: (B,S,Di) f32; bm, cm: (B,S,N) f32; A: (Di,N); h0: (B,Di,N).
+    The (B,Q,Di,N) decay/input tensors are built INSIDE the checkpointed
+    chunk body, so only (B,S,Di)-sized inputs and per-chunk state snapshots
+    survive to the backward pass.  Returns (y (B,S,Di), h_last)."""
+    Bd, S, Di = xf.shape
+    Q = min(SCAN_CHUNK, S)
+    if S % Q:
+        Q = S
+    nc = S // Q
+
+    @jax.checkpoint
+    def chunk(h, inp):
+        dt_q, x_q, b_q, c_q = inp                       # (B,Q,Di) / (B,Q,N)
+        a = jnp.exp(dt_q[..., None] * A)                # (B,Q,Di,N)
+        b = (dt_q * x_q)[..., None] * b_q[:, :, None, :]
+        b = b.at[:, 0].add(a[:, 0] * h)
+        _, hh = lax.associative_scan(_comb, (a, b), axis=1)
+        y = jnp.einsum("bqdn,bqn->bqd", hh, c_q)
+        return hh[:, -1], y
+
+    h_last, ys = lax.scan(chunk, h0, (_chunks(dt, nc, Q), _chunks(xf, nc, Q),
+                                      _chunks(bm, nc, Q), _chunks(cm, nc, Q)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bd, S, Di)
+    return y, h_last
+
+
+def ssm_apply(p, x, cfg, cache=None, *, use_pallas=False):
+    """x: (B,S,D).  cache: {"conv": (B,W-1,Di), "h": (B,Di,N)} or None.
+    Returns (y, new_cache)."""
+    B, S, D = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    dtr = cfg.resolved_dt_rank
+    cd = cfg.dtype
+
+    # SP: gather before the norm (bf16 edge; see transformer._attn_apply)
+    h_in = rms_norm(gathered(cfg, x), p["ln"], cfg.norm_eps)
+    xz = h_in @ p["ssm"]["in_proj"].astype(cd)               # (B,S,2Di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = constrain(xi, P(DP_AXES, U, TP))
+    conv_state = cache["conv"] if cache is not None else None
+    xi, new_conv = _causal_conv(xi, p["ssm"]["conv_w"], p["ssm"]["conv_b"],
+                                conv_state)
+    xi = jax.nn.silu(xi)
+
+    bcd = xi @ p["ssm"]["x_proj"].astype(cd)                 # (B,S,dtr+2N)
+    dt = jax.nn.softplus(
+        bcd[..., :dtr] @ p["ssm"]["dt_w"].astype(cd)
+        + p["ssm"]["dt_b"].astype(cd)).astype(jnp.float32)   # (B,S,Di)
+    Bm = bcd[..., dtr : dtr + n].astype(jnp.float32)         # (B,S,N)
+    Cm = bcd[..., dtr + n :].astype(jnp.float32)             # (B,S,N)
+    A = -jnp.exp(p["ssm"]["A_log"].astype(jnp.float32))      # (Di,N)
+    xf = xi.astype(jnp.float32)
+
+    if S == 1 and cache is not None:
+        a = jnp.exp(dt[:, 0, :, None] * A)                   # (B,Di,N)
+        b = (dt[:, 0] * xf[:, 0])[..., None] * Bm[:, 0][:, None, :]
+        h_new = a * cache["h"] + b                           # (B,Di,N)
+        y = jnp.einsum("bdn,bn->bd", h_new, Cm[:, 0])[:, None]
+        h_all_last = h_new
+    else:
+        h0 = cache["h"] if cache is not None \
+            else jnp.zeros((B, di, n), jnp.float32)
+        if use_pallas:
+            from repro.kernels.selective_scan import ops as _ss
+            y, h_all_last = _ss.selective_scan(xf, dt, Bm, Cm, A, h0)
+        else:
+            y, h_all_last = _ssm_chunked(dt, xf, Bm, Cm, A, h0)
+    y = y + p["ssm"]["D"].astype(jnp.float32) * xf
+    y = (y.astype(cd)) * jax.nn.silu(z)
+    out = y @ p["ssm"]["out_proj"].astype(cd)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "h": h_all_last}
+    return constrain(x + out, res_spec(cfg)), new_cache
+
+
+def ssm_cache_init(cfg, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), cfg.dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin family).
+
+Temporal block: ``y = out( gelu(gate(x)) * RG-LRU(conv1d(x_proj(x))) )``.
+RG-LRU (per channel):
+  r_t = sigmoid(W_r u_t + b_r);  i_t = sigmoid(W_i u_t + b_i)
+  a_t = sigmoid(Lambda) ** (c * r_t)          (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * u_t)
+Uses the same chunked associative scan as the SSM layer (N = 1 per channel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.norms import rms_norm
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.models.mamba import _causal_conv, _scan_chunked
+from repro.sharding.api import U, constrain
+from repro.sharding.rules import DP_AXES, TP, gathered, res_spec
+
+_C = 8.0
+
+
+def rec_init(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    rec = {
+        "x_proj": (jax.random.normal(ks[0], (d, w)) * d ** -0.5).astype(dt),
+        "gate_proj": (jax.random.normal(ks[1], (d, w)) * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_i": (jax.random.normal(ks[3], (w, w)) * w ** -0.5).astype(dt),
+        "b_i": jnp.zeros((w,), dt),
+        "w_r": (jax.random.normal(ks[4], (w, w)) * w ** -0.5).astype(dt),
+        "b_r": jnp.zeros((w,), dt),
+        # init a ~ 0.9..0.999 (sigmoid(lam) in that range)
+        "lam": jnp.linspace(2.2, 6.9, w).astype(dt),
+        "out_proj": (jax.random.normal(ks[5], (w, d)) * w ** -0.5).astype(dt),
+    }
+    return {
+        "ln1": jnp.ones((d,), dt),
+        "rec": rec,
+        "ln2": jnp.ones((d,), dt),
+        "mlp": mlp_init(ks[6], d, cfg.d_ff, cfg.mlp_act, dt),
+    }
+
+
+def rec_apply(p, x, cfg, cache=None):
+    """x (B,S,D) -> (y, new_cache); cache {"conv": (B,W-1,w), "h": (B,w)}."""
+    B, S, D = x.shape
+    cd = cfg.dtype
+    rec = p["rec"]
+    # SP: gather before the norm (bf16 edge; see transformer._attn_apply)
+    h_in = rms_norm(gathered(cfg, x), p["ln1"], cfg.norm_eps)
+
+    u = h_in @ rec["x_proj"].astype(cd)                       # (B,S,w)
+    u = constrain(u, P(DP_AXES, U, TP))
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, rec["conv_w"], rec["conv_b"], conv_state)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ rec["w_r"].astype(jnp.float32) + rec["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ rec["w_i"].astype(jnp.float32) + rec["b_i"].astype(jnp.float32))
+    log_a = _C * r * jax.nn.log_sigmoid(rec["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)                                        # (B,S,w)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, u.shape[-1]), jnp.float32)
+    if S == 1 and cache is not None:
+        h_new = a[:, 0] * h0 + b[:, 0]
+        h_seq = h_new[:, None]
+        h_last = h_new
+    else:
+        h_seq, h_last = _scan_chunked(a, b, h0)               # (B,S,w)
+
+    gate = jax.nn.gelu(h_in @ rec["gate_proj"].astype(cd), approximate=True)
+    y = (h_seq.astype(cd) * gate) @ rec["out_proj"].astype(cd)
+    x = constrain(x + y, res_spec(cfg))
+
+    h2 = rms_norm(gathered(cfg, x), p["ln2"], cfg.norm_eps)
+    x = constrain(x + mlp_apply(p["mlp"], h2, cfg.mlp_act, cd), res_spec(cfg))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "h": h_last}
+    return x, new_cache
+
+
+def rec_cache_init(cfg, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), cfg.dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

@@ -1,0 +1,21 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compress import (
+    quantize_int8,
+    dequantize_int8,
+    compressed_psum,
+    ef_state_init,
+)
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "clip_by_global_norm",
+    "global_norm",
+    "quantize_int8",
+    "dequantize_int8",
+    "compressed_psum",
+    "ef_state_init",
+]

@@ -1,0 +1,73 @@
+"""int8 block-quantized gradient compression with error feedback.
+
+Distributed-optimization trick (beyond-paper, see DESIGN.md S4): on pure-DP
+axes the gradient all-reduce can move int8 payloads (4x fewer bytes than
+fp32) at the cost of quantization noise, which error feedback re-injects on
+the next step so the optimizer sees an unbiased long-run gradient.
+
+``quantize_int8``/``dequantize_int8`` are also the checkpoint codec's
+reference implementation (see repro/kernels/ckpt_codec).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def quantize_int8(x):
+    """x (any shape) -> (q int8 [n_blocks, BLOCK], scale fp32 [n_blocks], meta)."""
+    flat, pad = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale, (x.shape, pad)
+
+
+def dequantize_int8(q, scale, meta, dtype=jnp.float32):
+    shape, pad = meta
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def ef_state_init(params):
+    """Error-feedback residual buffers, one per param leaf (fp32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(grads, ef, axis_name: str):
+    """Inside shard_map over a pure-DP axis: error-feedback int8 all-reduce.
+
+    g_eff = g + ef ; q = Q(g_eff) ; new_ef = g_eff - deQ(q) ;
+    reduced = psum(deQ(q)) / axis_size.
+    Sums dequantized fp32 values (numerically equivalent to summing int8
+    payloads with per-peer scales, which is what the wire format would carry:
+    int8 payload + fp32 per-block scale = ~4x byte reduction).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        g_eff = g.astype(jnp.float32) + e
+        q, s, meta = quantize_int8(g_eff)
+        deq = dequantize_int8(q, s, meta)
+        new_e = g_eff - deq
+        red = jax.lax.psum(deq, axis_name) / n
+        return red.astype(g.dtype), new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))

@@ -1,0 +1,20 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``final_frac * peak_lr``."""
+
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, peak_lr * cos)
+
+    return lr

@@ -1,0 +1,27 @@
+from repro.sharding.api import (
+    constrain,
+    current_mesh,
+    set_mesh,
+    spec,
+    mesh_context,
+)
+from repro.sharding.rules import (
+    batch_spec,
+    param_specs,
+    state_specs,
+    cache_specs,
+    DP_AXES,
+)
+
+__all__ = [
+    "constrain",
+    "current_mesh",
+    "set_mesh",
+    "spec",
+    "mesh_context",
+    "batch_spec",
+    "param_specs",
+    "state_specs",
+    "cache_specs",
+    "DP_AXES",
+]

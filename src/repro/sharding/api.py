@@ -1,0 +1,101 @@
+"""Mesh context + sharding-constraint helpers.
+
+A module-level mesh context lets model code express *logical* sharding
+constraints that become no-ops when no mesh is active (unit tests, CPU smoke
+runs) and resolve to NamedShardings on the production mesh (dry-run, train).
+Axis names absent from the active mesh are silently dropped from specs, so the
+same model code runs on (data, model), (pod, data, model) or no mesh at all.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def _filter_axes(mesh: Mesh, entry):
+    """Drop axis names that don't exist in the mesh."""
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in mesh.axis_names else None
+    # tuple of axis names
+    kept = tuple(a for a in entry if a in mesh.axis_names)
+    return kept if kept else None
+
+
+def spec(*entries) -> P:
+    return P(*entries)
+
+
+def resolve(partition_spec: P, mesh: Optional[Mesh] = None):
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    filtered = P(*(_filter_axes(mesh, e) for e in partition_spec))
+    return NamedSharding(mesh, filtered)
+
+
+U = P.UNCONSTRAINED  # "leave this dim to GSPMD propagation"
+
+
+def constrain(x, partition_spec: P):
+    """with_sharding_constraint that degrades gracefully:
+    - no active mesh -> identity;
+    - axis names missing from the mesh -> dropped;
+    - ``P.UNCONSTRAINED`` entries pass through (propagation decides);
+    - tuple entries that don't divide fall back to a divisible suffix
+      (("pod","data") -> ("data",)), then to UNCONSTRAINED — NEVER to
+      replicated, which would silently materialize the full dim on every
+      device."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = (list(partition_spec)
+               + [U] * (x.ndim - len(partition_spec)))
+    fixed = []
+    for dim, e in zip(x.shape, entries):
+        if e is None or e is U:
+            fixed.append(e)
+            continue
+        names = tuple(n for n in ((e,) if isinstance(e, str) else tuple(e))
+                      if n in mesh.axis_names)
+        while names:
+            total = 1
+            for n in names:
+                total *= sizes[n]
+            if dim % total == 0:
+                break
+            names = names[1:]  # drop the leading (outermost) axis
+        if not names:
+            fixed.append(U)
+        elif len(names) == 1:
+            fixed.append(names[0])
+        else:
+            fixed.append(names)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

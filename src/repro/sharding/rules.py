@@ -1,0 +1,199 @@
+"""Logical sharding rules: parameter / activation / cache PartitionSpecs.
+
+Layout (production mesh axes: optional "pod", "data", "model"):
+- batch                 -> ("pod","data")   (pure DP; "pod" is extra DP)
+- TP ("model")          -> attention heads, MLP hidden, vocab, SSM channels
+- FSDP ("data")         -> the non-TP weight axis of every large matrix
+- KV-cache sequence dim -> "model"          (decode sequence parallelism)
+- MoE experts           -> replicated ("tp" mode, hidden-dim TP inside the
+                           experts) or "model" ("ep" mode, when E % tp == 0)
+
+Weights keep heads as separate tensor dims — (D, H, hd) instead of
+(D, H*hd) — so head-axis sharding never fragments head_dim (uneven head
+counts, e.g. 12 heads over tp=16, shard with GSPMD padding, which is honest:
+the padded FLOPs appear in the per-device cost analysis).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+if TYPE_CHECKING:  # avoid a package-level import cycle (models -> layers ->
+    from repro.models.base import ModelConfig  # sharding.rules -> models)
+
+DP_AXES = ("pod", "data")
+FSDP = "data"
+TP = "model"
+
+
+def batch_spec(ndim_after_batch: int = 1) -> P:
+    return P(DP_AXES, *([None] * ndim_after_batch))
+
+
+def res_spec(cfg: "ModelConfig") -> P:
+    """Sharding of residual-stream activations (B,S,D): sequence-parallel
+    over "model" when cfg.seq_shard (Megatron SP), else replicated past DP."""
+    return P(DP_AXES, TP, None) if cfg.seq_shard else P(DP_AXES, None, None)
+
+
+def gathered(cfg: "ModelConfig", h):
+    """SP: re-gather the sequence dim before projections (no-op otherwise)."""
+    if cfg.seq_shard:
+        from repro.sharding.api import constrain
+        return constrain(h, P(DP_AXES, None, None))
+    return h
+
+
+def _attn_specs(cfg: "ModelConfig", tp_size: int) -> dict:
+    kv_shardable = tp_size == 0 or (cfg.num_kv_heads % max(tp_size, 1) == 0)
+    kv = TP if kv_shardable else None
+    s = {
+        "wq": P(FSDP, TP, None),
+        "wk": P(FSDP, kv, None),
+        "wv": P(FSDP, kv, None),
+        "wo": P(TP, None, FSDP),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P(TP, None)
+        s["bk"] = P(kv, None)
+        s["bv"] = P(kv, None)
+    return s
+
+
+def _mlp_specs() -> dict:
+    return {"w_in": P(FSDP, TP), "w_gate": P(FSDP, TP), "w_out": P(TP, FSDP)}
+
+
+def _moe_specs(cfg: "ModelConfig", tp_size: int, ep: bool) -> dict:
+    if ep and tp_size and cfg.num_experts % tp_size == 0:
+        e, tp = TP, None
+    else:
+        e, tp = None, TP
+    return {
+        "router": P(None, None),
+        "w_in": P(e, FSDP, tp),
+        "w_gate": P(e, FSDP, tp),
+        "w_out": P(e, tp, FSDP),
+    }
+
+
+def _ssm_specs() -> dict:
+    return {
+        "in_proj": P(FSDP, TP),
+        "conv_w": P(None, TP),
+        "conv_b": P(TP),
+        "x_proj": P(TP, None),
+        "dt_w": P(None, TP),
+        "dt_b": P(TP),
+        "A_log": P(TP, None),
+        "D": P(TP),
+        "out_proj": P(TP, FSDP),
+    }
+
+
+def _rec_specs() -> dict:
+    return {
+        "x_proj": P(FSDP, TP),
+        "gate_proj": P(FSDP, TP),
+        "conv_w": P(None, TP),
+        "conv_b": P(TP),
+        "w_i": P(FSDP, TP),
+        "b_i": P(TP),
+        "w_r": P(FSDP, TP),
+        "b_r": P(TP),
+        "lam": P(TP),
+        "out_proj": P(TP, FSDP),
+    }
+
+
+def layer_specs(cfg: "ModelConfig", kind: str, tp_size: int,
+                moe_ep: bool = False) -> dict:
+    from repro.models.base import FULL, LOCAL, BIDIR, SSM, REC
+
+    if kind in (FULL, LOCAL, BIDIR):
+        s: dict = {"ln1": P(None), "ln2": P(None),
+                   "attn": _attn_specs(cfg, tp_size)}
+        if cfg.sandwich_norm:
+            s["ln1_post"] = P(None)
+            s["ln2_post"] = P(None)
+        if cfg.num_experts:
+            s["moe"] = _moe_specs(cfg, tp_size, moe_ep)
+        else:
+            s["mlp"] = _mlp_specs()
+            if cfg.mlp_act not in ("silu", "gelu"):
+                s["mlp"].pop("w_gate")
+        return s
+    if kind == SSM:
+        return {"ln": P(None), "ssm": _ssm_specs()}
+    if kind == REC:
+        return {"ln1": P(None), "ln2": P(None), "rec": _rec_specs(),
+                "mlp": _mlp_specs()}
+    raise ValueError(kind)
+
+
+def _prepend(tree, n: int = 1):
+    return jax.tree.map(lambda p: P(*([None] * n), *p), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: "ModelConfig", tp_size: int, moe_ep: bool = False) -> dict:
+    """PartitionSpec pytree matching ``model.init``'s parameter pytree."""
+    specs: dict = {}
+    if not cfg.embedding_inputs:
+        specs["embed"] = {"tok": P(TP, None)}
+    kinds = cfg.layer_kinds()
+    if cfg.scan_layers:
+        pattern = cfg.pattern
+        specs["blocks"] = {
+            f"l{p}": _prepend(layer_specs(cfg, pattern[p], tp_size, moe_ep))
+            for p in range(len(pattern))
+        }
+    else:
+        specs["layers"] = {
+            f"layer_{i}": layer_specs(cfg, kinds[i], tp_size, moe_ep)
+            for i in range(cfg.num_layers)
+        }
+    specs["final_norm"] = P(None)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, TP)
+    return specs
+
+
+def cache_specs(cfg: "ModelConfig", tp_size: int) -> dict:
+    """PartitionSpec tree matching the decode cache pytree (see models)."""
+    from repro.models.base import FULL, LOCAL, BIDIR, SSM, REC
+
+    def one(kind: str) -> dict:
+        if kind in (FULL, LOCAL, BIDIR):
+            # KV cache: (B, Sc, K, hd) — sequence dim sharded over model (SP
+            # decode); batch over DP.
+            return {"k": P(DP_AXES, TP, None, None),
+                    "v": P(DP_AXES, TP, None, None),
+                    "pos": P(None)}
+        if kind == SSM:
+            return {"conv": P(DP_AXES, None, TP), "h": P(DP_AXES, TP, None)}
+        if kind == REC:
+            return {"conv": P(DP_AXES, None, TP), "h": P(DP_AXES, TP)}
+        raise ValueError(kind)
+
+    kinds = cfg.layer_kinds()
+    if cfg.scan_layers:
+        return {"blocks": {f"l{p}": _prepend(one(cfg.pattern[p]))
+                           for p in range(len(cfg.pattern))},
+                "index": P()}
+    return {"layers": {f"layer_{i}": one(kinds[i])
+                       for i in range(cfg.num_layers)},
+            "index": P()}
+
+
+def state_specs(cfg: "ModelConfig", tp_size: int, moe_ep: bool = False) -> dict:
+    """Specs for the full TrainState pytree (params + opt moments + scalars)."""
+    ps = param_specs(cfg, tp_size, moe_ep)
+    return {
+        "step": P(),
+        "params": ps,
+        "opt": {"m": ps, "v": ps, "count": P()},
+        "rng": P(None),
+    }

@@ -1,0 +1,12 @@
+from repro.train.state import TrainState, init_state
+from repro.train.step import make_train_step, loss_fn
+from repro.train.serve import make_prefill_step, make_decode_step
+
+__all__ = [
+    "TrainState",
+    "init_state",
+    "make_train_step",
+    "loss_fn",
+    "make_prefill_step",
+    "make_decode_step",
+]

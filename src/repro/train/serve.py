@@ -1,0 +1,45 @@
+"""Serving steps: batched prefill and single-token decode with KV cache.
+
+``decode_step`` is what the ``decode_*`` / ``long_*`` dry-run cells lower:
+one new token against a cache of ``seq_len`` (sequence-sharded over the
+"model" axis — SP decode, see sharding/rules.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.attention import NEG_INF
+from repro.models import forward
+from repro.models.base import ModelConfig
+
+
+def _mask_pad_vocab(cfg, logits):
+    if cfg.padded_vocab > cfg.vocab_size:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad, NEG_INF, logits)
+    return logits
+
+
+def make_prefill_step(cfg: ModelConfig, impl: Optional[str] = None) -> Callable:
+    def prefill_step(params, batch, cache):
+        logits, cache, _ = forward(cfg, params, batch, mode="prefill",
+                                   cache=cache, impl=impl)
+        logits = _mask_pad_vocab(cfg, logits.astype(jnp.float32))
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, impl: Optional[str] = None) -> Callable:
+    def decode_step(params, batch, cache):
+        logits, cache, _ = forward(cfg, params, batch, mode="decode",
+                                   cache=cache, impl=impl)
+        logits = _mask_pad_vocab(cfg, logits.astype(jnp.float32))
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return decode_step

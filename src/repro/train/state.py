@@ -1,0 +1,24 @@
+"""TrainState: the DeLIA *global state* — a plain pytree (dict) so the
+checkpoint layer can treat it generically."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_params
+from repro.models.base import ModelConfig
+from repro.optim import adamw_init
+
+TrainState = Dict[str, Any]
+
+
+def init_state(cfg: ModelConfig, key) -> TrainState:
+    params = init_params(cfg, key)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "params": params,
+        "opt": adamw_init(params),
+        "rng": jax.random.PRNGKey(0),
+    }

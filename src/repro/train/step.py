@@ -1,0 +1,112 @@
+"""Train step: loss, grads (with optional microbatch accumulation), clip,
+AdamW update.  The whole step is one BSP superstep (DESIGN.md S2): the
+collectives XLA inserts for the batch-sharded loss ARE the global sync.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.attention import NEG_INF
+from repro.models import forward
+from repro.models.base import ModelConfig
+from repro.optim import adamw_update, clip_by_global_norm
+from repro.optim.schedule import cosine_schedule
+
+AUX_WEIGHT = 0.01
+
+
+def loss_fn(cfg: ModelConfig, params, batch, impl: Optional[str] = None):
+    """Causal-LM (or frame-classification) cross entropy over padded vocab."""
+    logits, _, aux = forward(cfg, params, batch, mode="train", impl=impl)
+    logits = logits.astype(jnp.float32)
+    v, vp = cfg.vocab_size, cfg.padded_vocab
+    if vp > v:
+        pad_mask = jnp.arange(vp) >= v
+        logits = jnp.where(pad_mask, NEG_INF, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["targets"][..., None],
+                               axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    loss = nll + AUX_WEIGHT * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4,
+                    warmup_steps: int = 100, total_steps: int = 10_000,
+                    weight_decay: float = 0.1, clip_norm: float = 1.0,
+                    microbatches: int = 1, impl: Optional[str] = None,
+                    param_specs=None) -> Callable:
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (un-jitted —
+    the launcher/coordinator jits it with shardings).
+
+    ``param_specs``: PartitionSpec tree matching params.  Critical for FSDP +
+    gradient accumulation: it pins the grad accumulator (and each
+    microbatch's grads) to the parameter sharding, forcing a reduce-scatter
+    per microbatch instead of carrying data-replicated gradients."""
+    lr_fn = cosine_schedule(peak_lr, warmup_steps, total_steps)
+
+    def pin(grads):
+        if param_specs is None:
+            return grads
+        from repro.sharding.api import constrain
+        return jax.tree.map(constrain, grads, param_specs)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, impl), has_aux=True)(params)
+        return loss, metrics, pin(grads)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            def resplit(x, lead=0):
+                # split the batch dim into (microbatches, B/mb)
+                if x.ndim >= 1 and x.shape[lead] % microbatches == 0:
+                    shape = (x.shape[:lead] + (microbatches,
+                             x.shape[lead] // microbatches) + x.shape[lead + 1:])
+                    return jnp.moveaxis(x.reshape(shape), lead, 0)
+                raise ValueError(f"batch dim {x.shape} not divisible by "
+                                 f"{microbatches}")
+
+            mb_batch = {k: (resplit(v, 1) if k == "positions" else resplit(v, 0))
+                        for k, v in batch.items()}
+
+            def mb_body(acc, mb):
+                loss, metrics, grads = grads_of(params, mb)
+                acc_loss, acc_metrics, acc_grads = acc
+                return (acc_loss + loss,
+                        jax.tree.map(jnp.add, acc_metrics, metrics),
+                        jax.tree.map(jnp.add, acc_grads, grads)), None
+
+            zero_g = pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            zero_m = {"nll": jnp.zeros((), jnp.float32),
+                      "aux": jnp.zeros((), jnp.float32)}
+            (loss, metrics, grads), _ = lax.scan(
+                mb_body, (jnp.zeros((), jnp.float32), zero_m, zero_g), mb_batch)
+            inv = 1.0 / microbatches
+            loss = loss * inv
+            metrics = jax.tree.map(lambda x: x * inv, metrics)
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(state["step"])
+        new_params, new_opt = adamw_update(
+            grads, state["opt"], params, lr=lr, weight_decay=weight_decay)
+        new_state = {
+            "step": state["step"] + 1,
+            "params": new_params,
+            "opt": new_opt,
+            "rng": jax.random.fold_in(state["rng"], 1),
+        }
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **metrics}
+        return new_state, out_metrics
+
+    return train_step

@@ -1,0 +1,122 @@
+"""Checkpoint manager: roundtrip, atomicity, CRC, async, codec, GC."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CheckpointManager
+
+
+def _state(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "step": jnp.asarray(7, jnp.int32),
+        "params": {"w": jax.random.normal(k, (33, 17)),
+                   "b": jnp.zeros((17,))},
+        "opt": {"m": {"w": jnp.ones((33, 17)), "b": jnp.zeros((17,))},
+                "count": jnp.asarray(3, jnp.int32)},
+    }
+
+
+def _trees_equal(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(fa, fb))
+
+
+def test_roundtrip_with_template(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state()
+    mgr.save(7, st, {"cursor": 42})
+    restored, local = mgr.restore(like=st)
+    assert _trees_equal(st, restored)
+    assert local == {"cursor": 42}
+
+
+def test_roundtrip_without_template(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state()
+    mgr.save(1, st)
+    restored, _ = mgr.restore()
+    assert np.array_equal(np.asarray(restored["params"]["w"]),
+                          np.asarray(st["params"]["w"]))
+
+
+def test_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    st = _state()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, st)
+    assert mgr.latest_step() == 4
+    assert mgr.all_steps() == [3, 4]   # GC keeps 2
+
+
+def test_async_save_equivalent(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state()
+    stats = mgr.save(5, st, blocking=False)
+    assert not stats.blocking
+    mgr.wait()
+    restored, _ = mgr.restore(like=st)
+    assert _trees_equal(st, restored)
+
+
+def test_partial_write_is_invisible(tmp_path):
+    """A crash mid-write must never corrupt the readable latest step."""
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state()
+    mgr.save(1, st)
+    # simulate a crashed writer: a stale staging dir
+    os.makedirs(tmp_path / "step_00000002.tmp.999", exist_ok=True)
+    (tmp_path / "step_00000002.tmp.999" / "junk.npy").write_bytes(b"xx")
+    assert mgr.latest_step() == 1
+    restored, _ = mgr.restore(like=st)
+    assert _trees_equal(st, restored)
+
+
+def test_crc_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state()
+    mgr.save(1, st)
+    final = tmp_path / "step_00000001"
+    target = next(p for p in final.iterdir()
+                  if p.name.startswith("params.w"))
+    raw = bytearray(target.read_bytes())
+    raw[-1] ^= 0xFF
+    target.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="CRC"):
+        mgr.restore(like=st)
+
+
+def test_int8_codec_roundtrip_close(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), codec="int8")
+    st = _state()
+    mgr.save(1, st)
+    restored, _ = mgr.restore(like=st)
+    w0 = np.asarray(st["params"]["w"])
+    w1 = np.asarray(restored["params"]["w"])
+    # small tensors (<1024 elts) stay lossless; large would be quantized
+    assert np.allclose(w0, w1, atol=np.abs(w0).max() / 100)
+
+
+def test_int8_codec_compresses_large(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), codec="int8")
+    big = {"w": jax.random.normal(jax.random.PRNGKey(0), (256, 1024))}
+    stats = mgr.save(1, big)
+    assert stats.bytes_written < 256 * 1024 * 4 * 0.5   # ~4x smaller
+    restored, _ = mgr.restore(like=big)
+    w0, w1 = np.asarray(big["w"]), np.asarray(restored["w"])
+    assert np.abs(w0 - w1).max() < np.abs(w0).max() / 64
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    for s in (1, 2, 3):
+        st = _state(key=s)
+        mgr.save(s, st)
+    r2, _ = mgr.restore(step=2, like=_state())
+    assert np.array_equal(np.asarray(r2["params"]["w"]),
+                          np.asarray(_state(key=2)["params"]["w"]))

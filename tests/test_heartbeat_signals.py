@@ -1,0 +1,94 @@
+"""Interruption detection: UDP heartbeats + termination signals."""
+import os
+import signal
+import time
+
+from repro.core import HeartbeatEmitter, HeartbeatMonitor, TerminationSignal
+
+
+def test_heartbeat_detects_failstop():
+    failures = []
+    mon = HeartbeatMonitor(num_hosts=3, period=0.03, timeout_factor=4.0,
+                           on_failure=failures.append).start()
+    ems = [HeartbeatEmitter(i, mon.addr, 0.03).start() for i in range(3)]
+    time.sleep(0.3)
+    assert mon.alive_hosts() == [0, 1, 2]
+    assert not mon.any_failure()
+    ems[1].pause()                       # fail-stop: beats just stop
+    deadline = time.time() + 3
+    while not mon.any_failure() and time.time() < deadline:
+        time.sleep(0.02)
+    assert mon.failed_hosts() == [1]
+    assert failures == [1]
+    assert sorted(mon.alive_hosts()) == [0, 2]
+    for e in ems:
+        e.stop()
+    mon.stop()
+
+
+def test_heartbeat_rejoin_clears_failure():
+    mon = HeartbeatMonitor(num_hosts=1, period=0.03, timeout_factor=3.0
+                           ).start()
+    em = HeartbeatEmitter(0, mon.addr, 0.03).start()
+    time.sleep(0.2)
+    em.pause()
+    deadline = time.time() + 3
+    while not mon.any_failure() and time.time() < deadline:
+        time.sleep(0.02)
+    assert mon.any_failure()
+    em.resume()                          # failover / rejoin
+    deadline = time.time() + 3
+    while mon.any_failure() and time.time() < deadline:
+        time.sleep(0.02)
+    assert not mon.any_failure()
+    em.stop()
+    mon.stop()
+
+
+def test_termination_signal_latch():
+    ts = TerminationSignal(signals=(signal.SIGUSR1,)).install()
+    try:
+        assert not ts.triggered()
+        os.kill(os.getpid(), signal.SIGUSR1)
+        time.sleep(0.05)
+        assert ts.triggered()
+        assert ts.received == signal.SIGUSR1
+        ts.reset()
+        assert not ts.triggered()
+    finally:
+        ts.uninstall()
+
+
+def test_signal_triggers_final_checkpoint(tmp_path):
+    """Preemption flow: SIGUSR1 mid-training -> final save + clean exit."""
+    import jax
+
+    from repro.core import Dependability, DependabilityConfig, run_bsp
+    from repro.data import make_pipeline
+    from repro.models import get_config
+    from repro.train import init_state, make_train_step
+
+    cfg = get_config("gemma-7b", tiny=True)
+    dep = Dependability(DependabilityConfig(
+        checkpoint_dir=str(tmp_path), policy_mode="every_n", every_n=1000,
+        signal_detection=True)).start()
+    data = make_pipeline(cfg, 16, 2)
+    dep.register_local_state(data)
+    state = init_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg))
+
+    sent = {"done": False}
+
+    def on_metrics(s, rec):
+        if s == 3 and not sent["done"]:
+            sent["done"] = True
+            os.kill(os.getpid(), signal.SIGUSR1)
+
+    state, status, hist = run_bsp(dep, step, state, data, 100,
+                                  on_metrics=on_metrics)
+    assert status == "interrupted"
+    assert dep.interruption_cause().startswith("signal:")
+    assert dep.manager.latest_step() == 3      # final checkpoint landed
+    restored, local = dep.manager.restore(like=state)
+    assert local["step"] == 3                  # local state cursor too
+    dep.stop()

@@ -1,0 +1,95 @@
+"""Per-kernel allclose sweeps vs the pure-jnp ref.py oracles (interpret
+mode — kernel bodies execute on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("B,S,H,K,hd", [
+    (1, 128, 4, 4, 32), (2, 256, 4, 2, 64), (1, 256, 8, 1, 64),
+    (1, 512, 2, 2, 128),
+])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 64, 0.0), (True, 0, 30.0), (False, 0, 0.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, K, hd, causal, window, softcap,
+                               dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=128, block_k=128,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window,
+                        softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,Di,N", [
+    (1, 64, 32, 4), (2, 128, 64, 8), (1, 256, 128, 16),
+])
+def test_selective_scan_sweep(B, S, Di, N):
+    from repro.kernels.selective_scan.ops import selective_scan
+    from repro.kernels.selective_scan.ref import selective_scan_ref
+
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, S, Di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di))) * 0.1
+    bm = jax.random.normal(ks[2], (B, S, N))
+    cm = jax.random.normal(ks[3], (B, S, N))
+    a = -jnp.exp(jax.random.normal(ks[4], (Di, N)) * 0.2)
+    h0 = jax.random.normal(ks[5], (B, Di, N)) * 0.1
+    y, h = selective_scan(x, dt, bm, cm, a, h0, block_c=32, chunk=32,
+                          interpret=True)
+    yr, hr = selective_scan_ref(x, dt, bm, cm, a, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-5,
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(255,), (256,), (1000,), (64, 256),
+                                   (7, 13, 5)])
+@pytest.mark.parametrize("scale", [0.01, 1.0, 100.0])
+def test_ckpt_codec_sweep(shape, scale):
+    from repro.kernels.ckpt_codec.ops import dequantize, quantize
+    from repro.kernels.ckpt_codec.ref import dequantize_ref, quantize_ref
+
+    x = jax.random.normal(KEY, shape) * scale
+    q, s = quantize(x, interpret=True)
+    qr, sr = quantize_ref(x)
+    assert np.array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    y = dequantize(q, s, shape, interpret=True)
+    yr = dequantize_ref(qr, sr, shape)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-6)
+    # quantization error bounded by half a quantization step per block
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    assert err.max() <= np.abs(np.asarray(x)).max() / 127.0 * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (2, 16, 128), (128, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    from repro.kernels.rmsnorm.ops import rms_norm
+    from repro.kernels.rmsnorm.ref import rms_norm_ref
+
+    x = jax.random.normal(KEY, shape, dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (shape[-1],),
+                          jnp.float32)
+    y = rms_norm(x, w, interpret=True)
+    yr = rms_norm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=2e-2,
+                               rtol=2e-2)

@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step with shape + NaN assertions, and decode-path equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_pipeline
+from repro.models import forward, get_config, init_cache, init_params, \
+    list_archs
+from repro.train import init_state, make_train_step
+
+ARCHS = list_archs()
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B, S, key=KEY):
+    b = {}
+    if cfg.embedding_inputs:
+        b["embeddings"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                            cfg.dtype)
+    else:
+        b["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    b["targets"] = jax.random.randint(jax.random.fold_in(key, 1), (B, S),
+                                      0, cfg.vocab_size)
+    if cfg.mrope_sections:
+        b["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch):
+    cfg = get_config(arch, tiny=True)
+    params = init_params(cfg, KEY)
+    B, S = 2, 16
+    logits, cache, aux = forward(cfg, params, _batch(cfg, B, S), mode="train")
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert cache is None
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch, tiny=True)
+    state = init_state(cfg, KEY)
+    step = jax.jit(make_train_step(cfg, total_steps=10))
+    data = make_pipeline(cfg, seq_len=16, global_batch=2)
+    s1, m1 = step(state, data.next_batch())
+    s2, m2 = step(s1, data.next_batch())
+    assert int(s2["step"]) == 2
+    for mname in ("loss", "grad_norm"):
+        assert np.isfinite(float(m1[mname])), mname
+        assert np.isfinite(float(m2[mname])), mname
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a, tiny=True).has_decode])
+def test_prefill_decode_matches_full_forward(arch):
+    cfg = get_config(arch, tiny=True)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no cap drops
+    params = init_params(cfg, KEY)
+    B, S = 2, 12
+    batch = _batch(cfg, B, S)
+    batch.pop("targets")
+    full, _, _ = forward(cfg, params, batch, mode="train")
+
+    pre = {k: (v[:, :, :S - 1] if k == "positions" else v[:, :S - 1])
+           for k, v in batch.items()}
+    cache = init_cache(cfg, B, S)
+    _, cache, _ = forward(cfg, params, pre, mode="prefill", cache=cache)
+    dec = {k: (v[:, :, S - 1:S] if k == "positions" else v[:, S - 1:S])
+           for k, v in batch.items()}
+    dl, cache2, _ = forward(cfg, params, dec, mode="decode", cache=cache)
+    assert int(cache2["index"]) == S
+    np.testing.assert_allclose(np.asarray(dl[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_encoder_has_no_decode():
+    cfg = get_config("hubert-xlarge", tiny=True)
+    assert not cfg.has_decode
+
+
+def test_long_context_applicability():
+    from repro.launch.shapes import cell_applicable
+    ok_archs, skip_archs = [], []
+    for a in ARCHS:
+        ok, _ = cell_applicable(get_config(a), "long_500k")
+        (ok_archs if ok else skip_archs).append(a)
+    assert set(ok_archs) == {"falcon-mamba-7b", "recurrentgemma-2b",
+                             "mixtral-8x7b"}
+
+
+def test_loss_decreases_tiny_lm():
+    cfg = get_config("granite-3-8b", tiny=True)
+    state = init_state(cfg, KEY)
+    step = jax.jit(make_train_step(cfg, peak_lr=1e-2, warmup_steps=2,
+                                   total_steps=30))
+    data = make_pipeline(cfg, seq_len=32, global_batch=4)
+    first = last = None
+    batch = data.next_batch()  # overfit one batch
+    for i in range(15):
+        state, m = step(state, batch)
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first, (first, last)
+
+
+def test_microbatch_equivalence():
+    cfg = get_config("gemma-7b", tiny=True)
+    data = make_pipeline(cfg, seq_len=16, global_batch=4)
+    batch = data.next_batch()
+    s0 = init_state(cfg, KEY)
+    s1, m1 = jax.jit(make_train_step(cfg, microbatches=1))(s0, batch)
+    s0b = init_state(cfg, KEY)
+    s2, m2 = jax.jit(make_train_step(cfg, microbatches=2))(s0b, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=2e-5)
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5,
+                                   rtol=1e-4)
+
+
+def test_analytic_param_count_matches_init():
+    for arch in ARCHS:
+        cfg = get_config(arch, tiny=True)
+        shapes = jax.eval_shape(lambda c=cfg: init_params(c, KEY))
+        total = 0
+        for leaf in jax.tree.leaves(shapes):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            total += n
+        analytic = cfg.num_params()
+        # padded vocab + padded heads make init >= analytic; within 30%
+        assert total >= analytic * 0.7, arch
+        assert total <= analytic * 1.6 + 2 * cfg.padded_vocab * cfg.d_model, \
+            arch

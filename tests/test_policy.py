@@ -1,0 +1,76 @@
+"""Young/Daly + checkpoint-policy property tests (hypothesis)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policy import CheckpointPolicy, SystemModel, \
+    young_daly_period
+
+pos = st.floats(min_value=1e-3, max_value=1e9, allow_nan=False,
+                allow_infinity=False)
+
+
+@given(mu=pos, c=pos)
+@settings(max_examples=200, deadline=None)
+def test_young_daly_formula(mu, c):
+    """T = sqrt(2 (mu - D + R) C) — paper eq. (1) exactly (D=R=0 here)."""
+    t = young_daly_period(mu, c)
+    assert math.isclose(t, math.sqrt(2 * mu * c), rel_tol=1e-9)
+
+
+@given(mu=pos, c1=pos, c2=pos)
+@settings(max_examples=100, deadline=None)
+def test_young_daly_monotone_in_cost(mu, c1, c2):
+    lo, hi = sorted((c1, c2))
+    assert young_daly_period(mu, lo) <= young_daly_period(mu, hi)
+
+
+@given(c=pos, n1=st.integers(1, 10000), n2=st.integers(1, 10000))
+@settings(max_examples=100, deadline=None)
+def test_more_nodes_shorter_period(c, n1, n2):
+    """System MTBF = node MTBF / N: bigger fleets checkpoint more often."""
+    lo, hi = sorted((n1, n2))
+    t_lo = young_daly_period(SystemModel(num_nodes=lo).system_mtbf, c)
+    t_hi = young_daly_period(SystemModel(num_nodes=hi).system_mtbf, c)
+    assert t_hi <= t_lo
+
+
+@given(mu=pos, c=pos, d=st.floats(0, 1e3), r=st.floats(0, 1e3))
+@settings(max_examples=100, deadline=None)
+def test_young_daly_never_negative(mu, c, d, r):
+    assert young_daly_period(mu, c, r, d) >= 0.0
+
+
+def test_every_n_policy():
+    p = CheckpointPolicy(mode="every_n", every_n=3)
+    fired = [s for s in range(1, 13) if p.should_checkpoint(s)
+             and (p.record_checkpoint(s) or True)]
+    assert fired == [3, 6, 9, 12]
+
+
+def test_young_daly_policy_adapts():
+    p = CheckpointPolicy(mode="young_daly",
+                         system=SystemModel(node_mtbf_seconds=3600 * 100,
+                                            num_nodes=100))
+    # mu = 3600 s; step 1 s; C 0.5 s -> T_opt = sqrt(2*~3700*0.5) ~ 61 s
+    for _ in range(5):
+        p.observe_step(1.0)
+    p.observe_checkpoint(0.5)
+    assert 30 <= p.interval_steps() <= 120
+    # cheaper checkpoints (codec/async) => checkpoint more often
+    p2 = CheckpointPolicy(mode="young_daly",
+                          system=SystemModel(node_mtbf_seconds=3600 * 100,
+                                             num_nodes=100))
+    for _ in range(5):
+        p2.observe_step(1.0)
+    p2.observe_checkpoint(0.05)
+    assert p2.interval_steps() < p.interval_steps()
+
+
+def test_overhead_metric_eq2():
+    """Paper eq. (2): overhead = (M_with - M_without) / M_with."""
+    ov = CheckpointPolicy.fault_free_overhead(13441.8312,
+                                              13441.8312 - 174.9448)
+    assert abs(ov - 174.9448 / 13441.8312) < 1e-12
+    assert abs(ov - 0.013) < 0.002  # the paper's ~1.4% (1.3015%)
