@@ -1,7 +1,10 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV rows after each section's human-readable report.
+# CSV rows after each section's human-readable report, and persists the
+# checkpoint suite's rows to BENCH_checkpoint.json (name -> us_per_call)
+# so the perf trajectory is tracked across PRs.
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
@@ -30,6 +33,10 @@ def main() -> None:
     print("\n=== CSV (name,us_per_call,derived) ===")
     for r in all_rows:
         print(r)
+    json_path = os.environ.get("BENCH_CHECKPOINT_JSON",
+                               "BENCH_checkpoint.json")
+    if os.path.exists(json_path):  # written by bench_checkpoint.main
+        print(f"(machine-readable checkpoint results: {json_path})")
     if failed:
         sys.exit(1)
 

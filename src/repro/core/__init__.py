@@ -3,8 +3,9 @@ iterative JAX applications (interruption detection + data preservation +
 fail-stop recovery around BSP supersteps)."""
 from repro.core.api import Dependability, DependabilityConfig
 from repro.core.checkpoint import CheckpointManager, SaveStats
-from repro.core.codec import CODECS, Int8BlockCodec
+from repro.core.codec import CODECS, DeviceCodec, Int8BlockCodec
 from repro.core.coordinator import run_bsp, run_with_recovery
+from repro.core.io_engine import ShardIOEngine, crc32_array, write_npy
 from repro.core.elastic import (
     largest_grid,
     rescale_global_batch,
@@ -22,7 +23,11 @@ __all__ = [
     "CheckpointManager",
     "SaveStats",
     "CODECS",
+    "DeviceCodec",
     "Int8BlockCodec",
+    "ShardIOEngine",
+    "crc32_array",
+    "write_npy",
     "run_bsp",
     "run_with_recovery",
     "survivor_mesh",

@@ -4,14 +4,22 @@ int8 halves (vs bf16) / quarters (vs fp32) checkpoint bytes -> the Young/Daly
 cost C drops by the same factor -> the optimal period shrinks by sqrt(ratio)
 and more checkpoints fit the same overhead budget (DESIGN.md S3/S4).
 
-Encoding is numpy-side (it runs in the writer thread, off the BSP critical
-path).  The Pallas kernel (repro/kernels/ckpt_codec) implements the same
-block layout for on-device quantization (gradient compression / snapshot
-shrinking before device_get); repro/optim/compress.py is its jnp twin.
+Two encode paths share one payload layout (int8 q-blocks followed by fp32
+per-block scales), so the manifest records codec "int8" either way and
+restore is identical:
+
+- ``Int8BlockCodec``: numpy-side, runs in the writer pool off the BSP
+  critical path.  Decode side for both paths.
+- ``DeviceCodec``: quantizes *on device before device_get*, so the
+  device->host link and the disk see ~3.9x fewer bytes.  Backend: the
+  Pallas kernel (repro/kernels/ckpt_codec) on TPU, its jnp twin
+  (repro/optim/compress.py) elsewhere — both are layout- and bit-identical
+  to this file's numpy reference.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import functools
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -56,6 +64,72 @@ class Int8BlockCodec(Codec):
         if meta["pad"]:
             flat = flat[: -meta["pad"]]
         return flat.reshape(meta["shape"])
+
+
+class DeviceCodec:
+    """On-device int8 encoder producing Int8BlockCodec-compatible payloads.
+
+    ``encode`` returns *device* arrays (q int8 blocks + fp32 scales): the
+    caller transfers those instead of the fp32 leaf, then streams them
+    back-to-back into one .npy payload (see io_engine.write_npy) — no host
+    concatenation copy.  ``use_kernel=None`` auto-selects the Pallas kernel
+    on TPU and the jnp twin elsewhere (interpret-mode Pallas is only for
+    tests; it is far too slow for multi-MB leaves on CPU).
+    """
+
+    name = "int8"
+
+    def __init__(self, use_kernel: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+
+    def _kernel(self) -> bool:
+        if self.use_kernel is None:
+            import jax
+            return jax.default_backend() == "tpu"
+        return self.use_kernel
+
+    def encode(self, x):
+        """x: device array, any shape/float dtype -> (q (NB, BLOCK) int8,
+        scales (NB,) f32), both still on device."""
+        if self._kernel():
+            from repro.kernels.ckpt_codec.ops import quantize
+            return quantize(x, interpret=self.interpret)
+        return _jnp_encode(x)
+
+    def decode(self, q, scales, shape):
+        """Device-side inverse (tests/debug; restore uses the numpy path)."""
+        if self._kernel():
+            from repro.kernels.ckpt_codec.ops import dequantize
+            return dequantize(q, scales, tuple(shape),
+                              interpret=self.interpret)
+        return _jnp_decode(q, scales, tuple(shape))
+
+    @staticmethod
+    def block_meta(shape) -> Dict[str, Any]:
+        """Manifest metadata for a leaf shape (matches Int8BlockCodec's)."""
+        from repro.kernels.ckpt_codec.ops import block_meta
+        pad, blocks = block_meta(tuple(shape))
+        return {"shape": list(shape), "pad": pad, "blocks": blocks}
+
+
+@functools.lru_cache(maxsize=1)
+def _jnp_encode_jit():
+    import jax
+    from repro.optim.compress import quantize_int8
+    return jax.jit(lambda x: quantize_int8(x)[:2])
+
+
+def _jnp_encode(x):
+    return _jnp_encode_jit()(x)
+
+
+def _jnp_decode(q, scales, shape):
+    from repro.kernels.ckpt_codec.ops import block_meta
+    from repro.optim.compress import dequantize_int8
+    pad, _ = block_meta(tuple(shape))
+    return dequantize_int8(q, scales, (shape, pad))
 
 
 CODECS: Dict[str, Codec] = {"int8": Int8BlockCodec()}

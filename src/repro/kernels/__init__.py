@@ -17,3 +17,9 @@ Kernels (DESIGN.md S3):
 All validated against their oracles in interpret mode on CPU (this container
 has no TPU); on TPU hardware the same pallas_call lowers natively.
 """
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; kernels
+# use this alias so both spellings work.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or getattr(
+    _pltpu, "TPUCompilerParams")

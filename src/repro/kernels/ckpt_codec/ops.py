@@ -1,7 +1,18 @@
-"""Public codec wrapper: arbitrary-shape arrays <-> int8 blocks + scales."""
+"""Public codec wrapper: arbitrary-shape arrays <-> int8 blocks + scales.
+
+``quantize``/``dequantize`` are the fused flatten/pad/reshape wrappers around
+the block kernels: any leaf shape is flattened, zero-padded to a BLOCK
+multiple, viewed as (NB, BLOCK) and quantized in one jitted call — the
+kernel itself additionally pads NB to a ROWS multiple, so *every* leaf hits
+full-size grid tiles (no 1-row degradation for NB % 64 != 0).
+
+``block_meta`` computes the static payload metadata (pad, block count) the
+checkpoint manifest records for a given leaf shape.
+"""
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +23,15 @@ from repro.kernels.ckpt_codec.kernel import (BLOCK, dequantize_blocks,
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def block_meta(shape):
+    """Static (pad, n_blocks) of the packed payload for a leaf shape — the
+    single source of truth for the pad rule (DeviceCodec and the jnp twin
+    both route through it)."""
+    size = math.prod(shape) if shape else 1
+    pad = int((-size) % BLOCK)
+    return pad, int((size + pad) // BLOCK)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

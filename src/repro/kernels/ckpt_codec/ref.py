@@ -7,16 +7,22 @@ import jax.numpy as jnp
 BLOCK = 256
 
 
+def quantize_blocks_ref(blocks):
+    """(NB, BLOCK) f32 -> (q (NB, BLOCK) int8, scale (NB,) f32): the
+    block-level oracle for kernel.quantize_blocks (any NB, incl. non
+    ROWS-multiples)."""
+    scale = jnp.abs(blocks).max(axis=1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
 def quantize_ref(x):
     flat = x.astype(jnp.float32).reshape(-1)
     pad = (-flat.shape[0]) % BLOCK
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(-1, BLOCK)
-    scale = jnp.abs(blocks).max(axis=1) / 127.0
-    safe = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
-    return q, scale
+    return quantize_blocks_ref(flat.reshape(-1, BLOCK))
 
 
 def dequantize_ref(q, scale, shape):

@@ -19,6 +19,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -104,7 +106,7 @@ def flash_attention_bhsd(q, k, v, *, causal=True, window=0, softcap=0.0,
             pltpu.VMEM((bq, LANES), jnp.float32),
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

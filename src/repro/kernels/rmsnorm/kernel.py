@@ -11,6 +11,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 ROWS = 128
 
 
@@ -35,7 +37,7 @@ def rms_norm_2d(x, w, *, eps=1e-6, interpret=False):
         ],
         out_specs=pl.BlockSpec((rows, D), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, w)

@@ -6,7 +6,12 @@ fp32) at the cost of quantization noise, which error feedback re-injects on
 the next step so the optimizer sees an unbiased long-run gradient.
 
 ``quantize_int8``/``dequantize_int8`` are also the checkpoint codec's
-reference implementation (see repro/kernels/ckpt_codec).
+reference implementation (see repro/kernels/ckpt_codec) and MUST stay
+layout-identical to the Pallas kernel: same BLOCK, same zero-pad, same
+round/clip math.  ``use_kernel=True`` routes through the Pallas path
+(repro.kernels.ckpt_codec.ops) so the two implementations can be swapped —
+core/codec.py's DeviceCodec picks the kernel on TPU and this twin
+elsewhere.
 """
 from __future__ import annotations
 
@@ -24,8 +29,16 @@ def _pad_to_block(x):
     return flat, pad
 
 
-def quantize_int8(x):
-    """x (any shape) -> (q int8 [n_blocks, BLOCK], scale fp32 [n_blocks], meta)."""
+def quantize_int8(x, *, use_kernel=False, interpret=None):
+    """x (any shape) -> (q int8 [n_blocks, BLOCK], scale fp32 [n_blocks], meta).
+
+    ``use_kernel=True`` dispatches to the Pallas kernel (same layout, same
+    math); the default jnp path traces cleanly inside jit/shard_map."""
+    if use_kernel:
+        from repro.kernels.ckpt_codec.ops import block_meta, quantize
+        q, scale = quantize(x, interpret=interpret)
+        pad, _ = block_meta(x.shape)
+        return q, scale, (x.shape, pad)
     flat, pad = _pad_to_block(x.astype(jnp.float32))
     blocks = flat.reshape(-1, BLOCK)
     scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
@@ -34,8 +47,13 @@ def quantize_int8(x):
     return q, scale, (x.shape, pad)
 
 
-def dequantize_int8(q, scale, meta, dtype=jnp.float32):
+def dequantize_int8(q, scale, meta, dtype=jnp.float32, *, use_kernel=False,
+                    interpret=None):
     shape, pad = meta
+    if use_kernel:
+        from repro.kernels.ckpt_codec.ops import dequantize
+        return dequantize(q, scale, tuple(shape),
+                          interpret=interpret).astype(dtype)
     flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
     if pad:
         flat = flat[:-pad]

@@ -1,6 +1,9 @@
 """Data-pipeline determinism + local-state resume (hypothesis)."""
 import jax
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.data import make_pipeline

@@ -3,7 +3,37 @@ import os
 import signal
 import time
 
-from repro.core import HeartbeatEmitter, HeartbeatMonitor, TerminationSignal
+import pytest
+
+from repro.core import (Dependability, DependabilityConfig, HeartbeatEmitter,
+                        HeartbeatMonitor, TerminationSignal)
+
+
+def test_nonzero_host_requires_monitor_addr(tmp_path):
+    """No silent fallback to the discard port: hosts without a monitor must
+    be given an explicit address or fail loudly at start()."""
+    dep = Dependability(DependabilityConfig(
+        checkpoint_dir=str(tmp_path), heartbeat=True,
+        signal_detection=False), host_id=1, num_hosts=2)
+    with pytest.raises(ValueError, match="monitor_addr"):
+        dep.start()
+
+
+def test_nonzero_host_emits_to_configured_monitor(tmp_path):
+    """A non-zero host with monitor_addr set beats the configured monitor."""
+    mon = HeartbeatMonitor(num_hosts=2, period=0.03).start()
+    dep = Dependability(DependabilityConfig(
+        checkpoint_dir=str(tmp_path), heartbeat=True,
+        monitor_addr=tuple(mon.addr), heartbeat_period=0.03,
+        signal_detection=False), host_id=1, num_hosts=2)
+    dep.start()
+    assert dep.monitor is None and dep.emitter is not None
+    deadline = time.time() + 3
+    while 1 not in mon.last_seen and time.time() < deadline:
+        time.sleep(0.02)
+    assert 1 in mon.last_seen
+    dep.stop()
+    mon.stop()
 
 
 def test_heartbeat_detects_failstop():

@@ -60,7 +60,11 @@ def test_selective_scan_sweep(B, S, Di, N):
 
 
 @pytest.mark.parametrize("shape", [(255,), (256,), (1000,), (64, 256),
-                                   (7, 13, 5)])
+                                   (7, 13, 5),
+                                   # block counts that are NOT a multiple of
+                                   # the kernel's ROWS=64 tile (pad path)
+                                   (100, 256), (65, 256), (300, 100),
+                                   (16651,)])
 @pytest.mark.parametrize("scale", [0.01, 1.0, 100.0])
 def test_ckpt_codec_sweep(shape, scale):
     from repro.kernels.ckpt_codec.ops import dequantize, quantize
@@ -76,6 +80,54 @@ def test_ckpt_codec_sweep(shape, scale):
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-6)
     # quantization error bounded by half a quantization step per block
     err = np.abs(np.asarray(y) - np.asarray(x))
+    assert err.max() <= np.abs(np.asarray(x)).max() / 127.0 * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("nb", [1, 63, 64, 65, 100, 128, 130])
+def test_ckpt_codec_blocks_any_row_count(nb):
+    """Kernel-level check: quantize_blocks/dequantize_blocks handle any NB
+    (ROWS-padding path) and match the block-level oracle exactly."""
+    from repro.kernels.ckpt_codec.kernel import (dequantize_blocks,
+                                                 quantize_blocks)
+    from repro.kernels.ckpt_codec.ref import quantize_blocks_ref
+
+    x = jax.random.normal(KEY, (nb, 256)) * 3.0
+    q, s = quantize_blocks(x, interpret=True)
+    assert q.shape == (nb, 256) and s.shape == (nb, 128)
+    qr, sr = quantize_blocks_ref(x)
+    assert np.array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s[:, 0]), np.asarray(sr),
+                               rtol=1e-6)
+    y = dequantize_blocks(q, s, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(qr, np.float32) * np.asarray(sr)[:, None],
+        rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(255,), (300, 100), (65, 256), (7, 13, 5)])
+def test_device_codec_kernel_matches_numpy_codec(shape):
+    """Acceptance: the on-device codec (interpret-mode Pallas kernel) round-
+    trips within quantization tolerance of the numpy Int8BlockCodec for
+    arbitrary leaf shapes, including nb % 64 != 0 — and produces the exact
+    same payload bytes."""
+    from repro.core.codec import DeviceCodec, Int8BlockCodec
+
+    x = jax.random.normal(KEY, shape) * 5.0
+    dc = DeviceCodec(use_kernel=True, interpret=True)
+    q, s = dc.encode(x)
+    codec = Int8BlockCodec()
+    ref_payload, meta = codec.encode(np.asarray(x))
+    nb = meta["blocks"]
+    q_host = ref_payload[:nb * 256].view(np.int8).reshape(nb, 256)
+    s_host = ref_payload[nb * 256:].view(np.float32)
+    assert np.array_equal(np.asarray(q), q_host)       # int8 payload exact
+    np.testing.assert_allclose(np.asarray(s), s_host,  # scales: XLA may fold
+                               rtol=1e-6)              # /127 -> *(1/127)
+    # device decode == numpy decode == original (within quant tolerance)
+    y_dev = np.asarray(dc.decode(q, s, shape))
+    y_np = codec.decode(ref_payload, meta)
+    np.testing.assert_allclose(y_dev, y_np, rtol=1e-6, atol=1e-7)
+    err = np.abs(y_np - np.asarray(x))
     assert err.max() <= np.abs(np.asarray(x)).max() / 127.0 * 0.5 + 1e-6
 
 

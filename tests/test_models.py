@@ -77,9 +77,12 @@ def test_prefill_decode_matches_full_forward(arch):
            for k, v in batch.items()}
     dl, cache2, _ = forward(cfg, params, dec, mode="decode", cache=cache)
     assert int(cache2["index"]) == S
+    # bf16 logits resolve to ~2^-7 ulps around |x|~2; a few ulps of
+    # prefill/decode divergence is expected on CPU XLA
+    tol = 5e-2 if dl.dtype == jnp.bfloat16 else 1e-3
     np.testing.assert_allclose(np.asarray(dl[:, 0], np.float32),
                                np.asarray(full[:, -1], np.float32),
-                               atol=1e-3, rtol=1e-3)
+                               atol=tol, rtol=tol)
 
 
 def test_encoder_has_no_decode():

@@ -2,6 +2,8 @@
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.policy import CheckpointPolicy, SystemModel, \
