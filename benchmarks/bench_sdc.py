@@ -1,0 +1,146 @@
+"""SDC-guard overhead: what does each detection tier cost per step?
+
+Three numbers matter (docs/sdc.md):
+  - tier 1 ABFT: algorithmic overhead of the checksum-extended matmul vs a
+    plain matmul (jitted jnp pipelines — CPU interpret-mode kernel timings
+    are not TPU performance, same caveat as bench_kernels).
+  - tier 2 scrub: per-step cost of the rotating checksum pass, as a
+    fraction of the measured train-step time, at several scrub fractions —
+    the amortization curve (target: <5% at the default fraction).
+  - tier 3 sentinel: host-side metric check (should be ~free).
+
+Emits machine-readable ``BENCH_sdc.json`` (name -> us_per_call).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+STEPS = 6
+
+
+def _time(fn, *args, reps=10):
+    """Best-of timing: CPU XLA matmul runs are noisy under thread churn."""
+    fn(*args)  # compile/warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def write_json(results: Dict[str, float], path: str = "BENCH_sdc.json") -> str:
+    path = os.environ.get("BENCH_SDC_JSON", path)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    return path
+
+
+def main() -> List[str]:
+    rows: List[str] = []
+    results: Dict[str, float] = {}
+    k = jax.random.PRNGKey(0)
+
+    # ---- tier 1: ABFT matmul vs plain matmul (algorithmic overhead) ----
+    from repro.kernels.abft_matmul.ops import verify_and_correct
+    from repro.kernels.abft_matmul.ref import abft_matmul_ref
+
+    n = 512
+    a = jax.random.normal(k, (n, n))
+    b = jax.random.normal(jax.random.fold_in(k, 1), (n, n))
+    plain = jax.jit(lambda x, y: jnp.dot(x, y,
+                                         preferred_element_type=jnp.float32))
+    abft = jax.jit(lambda x, y: verify_and_correct(abft_matmul_ref(x, y))[0])
+    t_plain = _time(plain, a, b)
+    t_abft = _time(abft, a, b)
+    # paper eq.-(2) overhead convention, (M_with - M_without) / M_with —
+    # same as CheckpointPolicy.fault_free_overhead and the scrub % below
+    ov = (t_abft - t_plain) / t_abft
+    print(f"abft_matmul {n}x{n}: plain={t_plain:.0f}us "
+          f"abft={t_abft:.0f}us overhead={ov * 100:.1f}%")
+    rows.append(f"sdc_abft_matmul_{n},{t_abft:.0f},plain_us={t_plain:.0f}")
+    results[f"abft_matmul_{n}"] = t_abft
+    results[f"plain_matmul_{n}"] = t_plain
+
+    # ---- tier 2: scrub cost vs train-step time (amortization curve) ----
+    from repro.data import make_pipeline
+    from repro.models import get_config
+    from repro.sdc import StateScrubber
+    from repro.train import init_state, make_train_step
+
+    cfg = get_config("granite-3-8b", tiny=True)
+    step_fn = jax.jit(make_train_step(cfg, total_steps=STEPS + 1))
+    state = init_state(cfg, jax.random.PRNGKey(0))
+    data = make_pipeline(cfg, 16, 4)
+    state, _ = step_fn(state, data.next_batch())   # compile outside timing
+    t0 = time.perf_counter()
+    for _ in range(STEPS):
+        state, m = step_fn(state, data.next_batch())
+        jax.block_until_ready(m["loss"])
+    step_us = (time.perf_counter() - t0) / STEPS * 1e6
+    print(f"train step ({cfg.name} tiny): {step_us:.0f}us")
+    rows.append(f"sdc_train_step,{step_us:.0f},")
+    results["train_step"] = step_us
+
+    for fraction in (0.25, 1.0):
+        scr = StateScrubber(fraction=fraction)
+        # warm one full rotation: each distinct leaf subset jits its own
+        # batched reduction, cached from the second rotation on
+        for s in range(int(1 / fraction) + 1):
+            scr.record(state, s)
+        t0 = time.perf_counter()
+        for s in range(STEPS):
+            scr.verify(state)
+            scr.record(state, s)
+        scrub_us = (time.perf_counter() - t0) / STEPS * 1e6
+        pct = scrub_us / (step_us + scrub_us) * 100
+        print(f"scrub f={fraction}: {scrub_us:.0f}us/step "
+              f"({pct:.2f}% of the guarded step)")
+        rows.append(f"sdc_scrub_f{fraction},{scrub_us:.0f},pct={pct:.2f}")
+        results[f"scrub_f{fraction}"] = scrub_us
+
+    # ---- tier 2b: scrub throughput on a big state ----
+    # the tiny-model % above is dispatch-bound; at scale the reduction
+    # dominates, and overhead = fraction * state_bytes / (tput * step_s)
+    big = {f"w{i}": jax.random.normal(jax.random.fold_in(k, i), (1 << 20,))
+           for i in range(16)}                      # 64 MB, 16 leaves
+    jax.block_until_ready(big)
+    scr = StateScrubber(fraction=1.0)
+    scr.record(big, 0)
+    t0 = time.perf_counter()
+    for s in range(STEPS):
+        scr.record(big, s)
+    full_us = (time.perf_counter() - t0) / STEPS * 1e6
+    gbps = (64 / 1024) / (full_us / 1e6)
+    print(f"scrub 64MB full pass: {full_us:.0f}us ({gbps:.1f} GB/s)")
+    rows.append(f"sdc_scrub_64MB,{full_us:.0f},GBps={gbps:.1f}")
+    results["scrub_64MB_full"] = full_us
+
+    # ---- tier 3: sentinel (host-side, per step) ----
+    from repro.sdc import LossSentinel
+
+    sent = LossSentinel()
+    t0 = time.perf_counter()
+    reps = 10_000
+    for i in range(reps):
+        sent.observe(i, 2.0, grad_norm=1.0, nonfinite=0.0)
+    sent_us = (time.perf_counter() - t0) / reps * 1e6
+    print(f"sentinel observe: {sent_us:.3f}us")
+    rows.append(f"sdc_sentinel,{sent_us:.3f},")
+    results["sentinel_observe"] = sent_us
+
+    path = write_json(results)
+    print(f"(machine-readable: {path})")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

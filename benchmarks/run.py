@@ -12,12 +12,13 @@ import traceback
 def main() -> None:
     sections = []
     from benchmarks import (bench_checkpoint, bench_heartbeat, bench_kernels,
-                            bench_overhead_fwi, bench_throughput)
+                            bench_overhead_fwi, bench_sdc, bench_throughput)
     suites = [
         ("overhead_fwi (paper Fig.1-2, eq.2-3)", bench_overhead_fwi.main),
         ("checkpoint cost + Young/Daly (eq.1)", bench_checkpoint.main),
         ("heartbeat detection", bench_heartbeat.main),
         ("kernels vs oracles", bench_kernels.main),
+        ("SDC guard overhead (docs/sdc.md)", bench_sdc.main),
         ("train-loop throughput", bench_throughput.main),
     ]
     all_rows = []
@@ -33,10 +34,11 @@ def main() -> None:
     print("\n=== CSV (name,us_per_call,derived) ===")
     for r in all_rows:
         print(r)
-    json_path = os.environ.get("BENCH_CHECKPOINT_JSON",
-                               "BENCH_checkpoint.json")
-    if os.path.exists(json_path):  # written by bench_checkpoint.main
-        print(f"(machine-readable checkpoint results: {json_path})")
+    for env, default in (("BENCH_CHECKPOINT_JSON", "BENCH_checkpoint.json"),
+                         ("BENCH_SDC_JSON", "BENCH_sdc.json")):
+        json_path = os.environ.get(env, default)
+        if os.path.exists(json_path):  # written by the owning bench module
+            print(f"(machine-readable results: {json_path})")
     if failed:
         sys.exit(1)
 

@@ -2,4 +2,8 @@
 # Tier-1 verify: the command ROADMAP.md pins, from any cwd.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+# the SDC suite is part of tier 1 (tests/test_sdc.py end-to-end + unit,
+# ABFT kernel-vs-oracle sweeps in tests/test_kernels.py); the full-tests
+# run below collects it — fail loudly if it ever goes missing
+test -f tests/test_sdc.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

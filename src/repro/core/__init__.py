@@ -12,7 +12,8 @@ from repro.core.elastic import (
     reshard_state,
     survivor_mesh,
 )
-from repro.core.failures import FaultInjector, SimulatedFailure, StragglerWatchdog
+from repro.core.failures import (CorruptionDetected, FaultInjector,
+                                 SimulatedFailure, StragglerWatchdog, flip_bit)
 from repro.core.heartbeat import HeartbeatEmitter, HeartbeatMonitor
 from repro.core.policy import CheckpointPolicy, SystemModel, young_daly_period
 from repro.core.signals import TerminationSignal
@@ -34,9 +35,11 @@ __all__ = [
     "reshard_state",
     "rescale_global_batch",
     "largest_grid",
+    "CorruptionDetected",
     "FaultInjector",
     "SimulatedFailure",
     "StragglerWatchdog",
+    "flip_bit",
     "HeartbeatEmitter",
     "HeartbeatMonitor",
     "CheckpointPolicy",

@@ -25,10 +25,11 @@ import time
 from typing import Any, Dict, Optional, Tuple
 
 from repro.core.checkpoint import CheckpointManager, SaveStats
-from repro.core.failures import StragglerWatchdog
+from repro.core.failures import CorruptionDetected, StragglerWatchdog
 from repro.core.heartbeat import HeartbeatEmitter, HeartbeatMonitor
 from repro.core.policy import CheckpointPolicy, SystemModel
 from repro.core.signals import TerminationSignal
+from repro.sdc import LossSentinel, StateScrubber
 
 
 @dataclasses.dataclass
@@ -54,6 +55,19 @@ class DependabilityConfig:
     - ``heartbeat``: host 0 runs the UDP monitor; other hosts MUST set
       ``monitor_addr`` to host 0's advertised ``(ip, port)`` — there is no
       silent fallback address.
+
+    Silent-data-corruption detection (docs/sdc.md):
+    - ``scrub``: run the tier-2 StateScrubber — each superstep checksums a
+      rotating ``scrub_fraction`` of the state leaves and re-verifies them
+      before the next update; a mismatch raises CorruptionDetected naming
+      the corrupted leaf.  Checkpoints taken while scrubbing is clean are
+      recorded as *verified* and preferred by corruption rollback.
+    - ``sentinel``: the tier-3 end-to-end guard — non-finite loss/grad-norm
+      and loss > ``sentinel_spike_factor`` x a running EMA.
+    - tier 1 (ABFT matmuls) is enabled per-model via ``impl="abft"`` in
+      make_train_step / forward, not here.
+    - ``policy_formula``: Young/Daly bracket convention, "paper"
+      (mu - D + R, the paper's printed eq. 1) or "standard" (mu - D - R).
     """
     checkpoint_dir: str
     policy_mode: str = "young_daly"          # or "every_n"
@@ -72,6 +86,12 @@ class DependabilityConfig:
     signal_detection: bool = True
     straggler_factor: float = 3.0
     system: SystemModel = dataclasses.field(default_factory=SystemModel)
+    policy_formula: str = "paper"             # Young/Daly bracket convention
+    scrub: bool = False                       # tier-2 SDC: state scrubber
+    scrub_fraction: float = 0.25              # leaves checksummed per step
+    sentinel: bool = False                    # tier-3 SDC: loss sentinel
+    sentinel_spike_factor: float = 10.0
+    sentinel_warmup: int = 5
 
 
 class Dependability:
@@ -87,8 +107,17 @@ class Dependability:
             verify_crc=config.verify_crc, keep=config.keep)
         self.policy = CheckpointPolicy(
             mode=config.policy_mode, every_n=config.every_n,
-            system=config.system)
+            system=config.system, formula=config.policy_formula)
         self.stragglers = StragglerWatchdog(factor=config.straggler_factor)
+        self.scrubber: Optional[StateScrubber] = (
+            StateScrubber(fraction=config.scrub_fraction)
+            if config.scrub else None)
+        self.sentinel: Optional[LossSentinel] = (
+            LossSentinel(spike_factor=config.sentinel_spike_factor,
+                         warmup=config.sentinel_warmup)
+            if config.sentinel else None)
+        self.verified_steps: set = set()      # saved while scrub-clean
+        self.last_restore_skipped: list = []
         self.signals: Optional[TerminationSignal] = None
         self.monitor: Optional[HeartbeatMonitor] = None
         self.emitter: Optional[HeartbeatEmitter] = None
@@ -160,6 +189,48 @@ class Dependability:
         return None
 
     # ------------------------------------------------------------------
+    # SDC detection (docs/sdc.md; no-ops unless scrub/sentinel enabled)
+    # ------------------------------------------------------------------
+    def scrub(self, state, step: int) -> list:
+        """Tier-2 scrub pass: checksum the next rotating subset of state
+        leaves.  Call right after ``train_step`` produces the state;
+        returns the leaf names covered this step."""
+        if self.scrubber is None:
+            return []
+        return self.scrubber.record(state, step)
+
+    def verify_state(self, state, step: int) -> None:
+        """Re-verify the leaves the last ``scrub`` recorded — the state
+        must not have legitimately changed in between (call at the top of
+        the superstep, before ``train_step`` consumes it).  Raises
+        CorruptionDetected naming the corrupted leaves on mismatch."""
+        if self.scrubber is None:
+            return
+        bad = self.scrubber.verify(state)
+        if bad:
+            raise CorruptionDetected(step, "scrub", ",".join(bad))
+
+    def check_metrics(self, step: int, metrics: Dict) -> None:
+        """Tier-3 sentinel over one superstep's metrics; raises
+        CorruptionDetected when the loss looks corrupted."""
+        if self.sentinel is None:
+            return
+        reason = self.sentinel.observe(
+            step, float(metrics.get("loss", 0.0)),
+            grad_norm=(float(metrics["grad_norm"])
+                       if "grad_norm" in metrics else None),
+            nonfinite=(float(metrics["nonfinite"])
+                       if "nonfinite" in metrics else None))
+        if reason is not None:
+            raise CorruptionDetected(step, "sentinel", reason)
+
+    def reset_sdc(self) -> None:
+        """Call after a rollback: the restored state is a different set of
+        buffers than the recorded scrub window."""
+        if self.scrubber is not None:
+            self.scrubber.reset()
+
+    # ------------------------------------------------------------------
     # data preservation
     # ------------------------------------------------------------------
     def observe_step(self, seconds: float, step: Optional[int] = None) -> bool:
@@ -184,17 +255,39 @@ class Dependability:
         self.policy.observe_checkpoint(cost)
         self.policy.record_checkpoint(step)
         self.save_history.append(stats)
+        if self.scrubber is not None:
+            # scrubbing was clean up to this step, else CorruptionDetected
+            # would have unwound the loop before the save
+            self.verified_steps.add(step)
         return stats
 
     def restore_latest(self, like=None, shardings=None,
-                       step: Optional[int] = None):
-        """Returns (state, step).  Reloads the registered local state."""
+                       step: Optional[int] = None, exclude=None):
+        """Returns (state, step).  Reloads the registered local state.
+
+        With ``step=None`` this walks back through the retained history on
+        a corrupt checkpoint (CRC mismatch etc.) instead of failing, and
+        prefers scrub-verified steps when scrubbing is on; any skipped
+        steps land in ``self.last_restore_skipped`` — surface them.
+        ``exclude``: steps not to consider (recovery passes checkpoints
+        that already failed to get training past a corruption)."""
         like = like if like is not None else self._global_template
         shardings = (shardings if shardings is not None
                      else self._global_shardings)
-        state, local = self.manager.restore(step=step, like=like,
-                                            shardings=shardings)
+        self.last_restore_skipped = []
+        if step is not None:
+            state, local = self.manager.restore(step=step, like=like,
+                                                shardings=shardings)
+            got_step = step
+        else:
+            have = [s for s in self.manager.all_steps()
+                    if s not in set(exclude or ())]
+            verified = sorted(self.verified_steps.intersection(have),
+                              reverse=True)
+            rest = sorted(set(have) - self.verified_steps, reverse=True)
+            state, local, got_step, skipped = self.manager.restore_latest(
+                like=like, shardings=shardings, candidates=verified + rest)
+            self.last_restore_skipped = skipped
         if local is not None and self._local_provider is not None:
             self._local_provider.load_state_dict(local)
-        got_step = step if step is not None else self.manager.latest_step()
         return state, got_step

@@ -428,3 +428,36 @@ class CheckpointManager:
             with open(lp) as f:
                 local = json.load(f)
         return state, local
+
+    def restore_latest(self, *, like=None, shardings=None,
+                       candidates: Optional[List[int]] = None
+                       ) -> Tuple[Any, Optional[Dict], int, List[Tuple[int, str]]]:
+        """Restore the newest checkpoint that actually verifies.
+
+        On a corrupt checkpoint (CRC mismatch, truncated shard, unreadable
+        or incomplete manifest) it walks back through the retained ``keep``
+        history instead of failing the whole restore.  ``candidates``
+        overrides the try-order (first entry tried first) — e.g. the
+        SDC layer passes scrub-verified steps first.
+
+        Returns (state, local_state, step, skipped) where ``skipped`` is
+        [(step, reason), ...] for every checkpoint that had to be passed
+        over — callers should surface it: each entry is lost work.
+        """
+        if candidates is None:
+            candidates = list(reversed(self.all_steps()))
+        skipped: List[Tuple[int, str]] = []
+        for s in candidates:
+            try:
+                state, local = self.restore(step=s, like=like,
+                                            shardings=shardings)
+                return state, local, s, skipped
+            except (IOError, ValueError, json.JSONDecodeError) as e:
+                # NOT KeyError: a template leaf missing from the manifest
+                # is a caller bug that affects every candidate identically
+                # — walking back would silently discard all progress
+                skipped.append((s, f"{type(e).__name__}: {e}"))
+        detail = "; ".join(f"step {s}: {r}" for s, r in skipped)
+        raise FileNotFoundError(
+            f"no restorable checkpoint under {self.directory}"
+            + (f" (skipped {detail})" if detail else ""))

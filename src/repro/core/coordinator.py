@@ -2,9 +2,22 @@
 
 ``run_bsp`` executes supersteps with interruption detection + data
 preservation at step boundaries.  ``run_with_recovery`` wraps it with
-fail-stop recovery: a (simulated or real) failure triggers restore from the
-last committed checkpoint and continuation — the end-to-end behaviour DeLIA
-provides to its host application.
+fail-stop AND silent-data-corruption recovery: a (simulated or real)
+failure triggers restore from the last committed checkpoint and
+continuation; a CorruptionDetected from any SDC tier (docs/sdc.md)
+triggers rollback to the last checksum-verified checkpoint — the
+end-to-end behaviour DeLIA provides to its host application.
+
+SDC hooks inside each superstep (all no-ops unless enabled):
+  - ``dep.verify_state`` at the top: re-checksums the leaves the previous
+    iteration's scrub recorded — the state must be bit-identical, because
+    nothing legitimate touches it between supersteps.
+  - ``fault_injector.apply_sdc`` right before that verify: scheduled
+    bit-flips strike the state exactly where real memory corruption
+    would, inside the record->verify window.
+  - ``dep.scrub`` at the bottom: checksums the next rotating subset of
+    the freshly-produced state.
+  - ``dep.check_metrics`` after the superstep: the tier-3 loss sentinel.
 """
 from __future__ import annotations
 
@@ -14,7 +27,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 
 from repro.core.api import Dependability
-from repro.core.failures import FaultInjector, SimulatedFailure
+from repro.core.failures import (CorruptionDetected, FaultInjector,
+                                 SimulatedFailure)
 
 
 def run_bsp(dep: Dependability, train_step: Callable, state, data,
@@ -24,6 +38,8 @@ def run_bsp(dep: Dependability, train_step: Callable, state, data,
     """Runs supersteps until ``num_steps`` or interruption.
 
     Returns (state, status, history); status in {"done", "interrupted"}.
+    May raise SimulatedFailure (injected fail-stop) or CorruptionDetected
+    (SDC tier tripped) — run_with_recovery handles both.
     """
     history: List[Dict] = []
     step = int(jax.device_get(state["step"]))
@@ -32,6 +48,11 @@ def run_bsp(dep: Dependability, train_step: Callable, state, data,
             if final_save:
                 dep.save(step, state, final=True)
             return state, "interrupted", history
+
+        if fault_injector is not None:
+            # SDC strikes the at-rest state inside the record->verify window
+            state = fault_injector.apply_sdc(step + 1, state)
+        dep.verify_state(state, step + 1)      # may raise CorruptionDetected
 
         batch = data.next_batch()
         t0 = time.perf_counter()
@@ -43,12 +64,14 @@ def run_bsp(dep: Dependability, train_step: Callable, state, data,
         dt = time.perf_counter() - t0
         step += 1
 
+        dep.scrub(state, step)                 # record the next scrub window
         straggler = dep.observe_step(dt, step)
         rec = {"step": step, "seconds": dt, "straggler": straggler,
                **{k: float(v) for k, v in metrics.items()}}
         history.append(rec)
         if on_metrics:
             on_metrics(step, rec)
+        dep.check_metrics(step, metrics)       # may raise CorruptionDetected
 
         if dep.should_checkpoint(step):
             dep.save(step, state)
@@ -62,15 +85,21 @@ def run_with_recovery(dep: Dependability, train_step: Callable, state, data,
                       max_restarts: int = 3,
                       like=None, shardings=None,
                       on_metrics=None) -> Tuple[Any, Dict]:
-    """Fail-stop recovery loop: restore-from-checkpoint on failure.
+    """Failure recovery loop: restore-from-checkpoint on fail-stop OR
+    detected corruption.
 
-    ``like``/``shardings`` describe the state pytree for restore (defaults to
-    the registered global template)."""
+    ``like``/``shardings`` describe the state pytree for restore (defaults
+    to the registered global template).  Corruption rollback restores the
+    newest checksum-verified checkpoint (walking back past any checkpoint
+    whose CRCs no longer verify); every rollback/restart is an event in
+    the returned history."""
     restarts = 0
     all_history: List[Dict] = []
     state0 = state                           # scratch-restart fallback
     local0 = (dep._local_provider.state_dict()
               if dep._local_provider is not None else None)
+    corrupt_exclude: set = set()
+    last_corrupt_restore = None              # (step, saves seen at restore)
     while True:
         try:
             state, status, hist = run_bsp(
@@ -79,17 +108,42 @@ def run_with_recovery(dep: Dependability, train_step: Callable, state, data,
             all_history.extend(hist)
             return state, {"status": status, "restarts": restarts,
                            "history": all_history}
-        except SimulatedFailure as e:
-            all_history.append({"step": e.step, "event": f"failure:{e.kind}"})
+        except (SimulatedFailure, CorruptionDetected) as e:
+            is_corruption = isinstance(e, CorruptionDetected)
+            if is_corruption:
+                all_history.append({
+                    "step": e.step,
+                    "event": f"corruption:{e.kind}:{e.detail}"})
+            else:
+                all_history.append({"step": e.step,
+                                    "event": f"failure:{e.kind}"})
             restarts += 1
             if restarts > max_restarts:
                 raise
             dep.manager.wait()
+            if (is_corruption and last_corrupt_restore is not None
+                    and len(dep.save_history) == last_corrupt_restore[1]):
+                # corruption re-tripped without a single new checkpoint:
+                # the checkpoint we rolled back to is itself suspect (CRC
+                # can't see corruption that happened before the save) —
+                # walk one further back instead of livelocking on it
+                corrupt_exclude.add(last_corrupt_restore[0])
             try:
-                state, got = dep.restore_latest(like=like,
-                                                shardings=shardings)
-            except FileNotFoundError:
-                # failed before the first checkpoint: restart from scratch
+                state, got = dep.restore_latest(
+                    like=like, shardings=shardings,
+                    exclude=corrupt_exclude if is_corruption else None)
+                if dep.last_restore_skipped:
+                    all_history.append({
+                        "step": got, "event": "restore:skipped:" + ",".join(
+                            str(s) for s, _ in dep.last_restore_skipped)})
+                if is_corruption:
+                    last_corrupt_restore = (got, len(dep.save_history))
+            except FileNotFoundError as fnf:
+                # no (acceptable) checkpoint at all: restart from scratch
+                all_history.append({"step": e.step,
+                                    "event": f"restore:scratch:{fnf}"})
                 state = state0
                 if local0 is not None:
                     dep._local_provider.load_state_dict(local0)
+                last_corrupt_restore = None
+            dep.reset_sdc()

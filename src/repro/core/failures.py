@@ -1,9 +1,15 @@
-"""Fail-stop fault injection + straggler watchdog.
+"""Fault injection (fail-stop, straggle, SDC) + straggler watchdog.
 
 ``FaultInjector`` simulates the paper's fault model for tests/examples: a
 scheduled fail-stop raises ``SimulatedFailure`` at a step boundary (the
 process "dies"); the harness then restarts from the last checkpoint exactly
-like a scheduler would relaunch the job.
+like a scheduler would relaunch the job.  ``schedule_bitflip`` is the
+silent-data-corruption counterpart: instead of killing the process it flips
+one bit inside a named state leaf — the run keeps going with a wrong answer
+until an SDC tier (docs/sdc.md) notices.
+
+``CorruptionDetected`` is the signal those tiers raise; the recovery loop
+treats it like a failure whose cure is rollback rather than restart.
 
 ``StragglerWatchdog`` addresses slow-node ("fail-stutter") behaviour: it
 tracks step durations and flags steps slower than ``factor`` x the running
@@ -13,7 +19,7 @@ from __future__ import annotations
 
 import statistics
 import time
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional, Set, Tuple
 
 
 class SimulatedFailure(RuntimeError):
@@ -24,11 +30,46 @@ class SimulatedFailure(RuntimeError):
         self.kind = kind
 
 
+class CorruptionDetected(RuntimeError):
+    """An SDC tier found corrupted state/output.
+
+    kind: "scrub" (tier 2, ``detail`` names the corrupted leaves),
+    "sentinel" (tier 3, ``detail`` is the trip reason), or "abft"
+    (tier 1 uncorrectable).  Recovery: roll back to the last
+    checksum-verified checkpoint (core/coordinator.run_with_recovery).
+    """
+
+    def __init__(self, step: int, kind: str, detail: str = ""):
+        super().__init__(f"corruption detected at step {step} "
+                         f"[{kind}] {detail}")
+        self.step = step
+        self.kind = kind
+        self.detail = detail
+
+
+def flip_bit(leaf, bit: int):
+    """Return a copy of ``leaf`` with absolute ``bit`` of its buffer
+    flipped (bit // 8 = byte offset, little-endian within the byte)."""
+    import jax
+    import numpy as np
+
+    arr = np.array(jax.device_get(leaf))     # writable, contiguous host copy
+    flat = arr.reshape(-1).view(np.uint8)    # aliases arr's buffer
+    if not 0 <= bit < flat.size * 8:
+        raise IndexError(f"bit {bit} out of range for {flat.size}-byte leaf")
+    flat[bit // 8] ^= np.uint8(1 << (bit % 8))
+    if isinstance(leaf, jax.Array):
+        return jax.device_put(arr, leaf.sharding)
+    return arr
+
+
 class FaultInjector:
     def __init__(self):
         self._fail_at: Dict[int, int] = {}     # step -> host
         self._slow_at: Dict[int, float] = {}   # step -> extra seconds
+        self._flip_at: Dict[int, List[Tuple[str, int]]] = {}  # step -> flips
         self.triggered: List[int] = []
+        self.sdc_injected: List[Tuple[int, str, int]] = []
 
     def schedule_failstop(self, step: int, host_id: int = 0):
         self._fail_at[step] = host_id
@@ -36,6 +77,13 @@ class FaultInjector:
 
     def schedule_straggle(self, step: int, extra_seconds: float):
         self._slow_at[step] = extra_seconds
+        return self
+
+    def schedule_bitflip(self, step: int, leaf: str, bit: int):
+        """Flip ``bit`` of state leaf ``leaf`` (dotted name, checkpoint-
+        manifest convention: e.g. "params.blocks.l0.mlp.w_in") just before
+        superstep ``step`` executes.  Deterministic SDC for tests."""
+        self._flip_at.setdefault(step, []).append((leaf, bit))
         return self
 
     def check(self, step: int):
@@ -46,6 +94,28 @@ class FaultInjector:
             host = self._fail_at.pop(step)
             self.triggered.append(step)
             raise SimulatedFailure(step, host)
+
+    def apply_sdc(self, step: int, state):
+        """Return ``state`` with any bit-flips scheduled for ``step``
+        applied (the identity when none are due).  Unlike ``check`` this
+        corrupts silently — nothing raises."""
+        flips = self._flip_at.pop(step, None)
+        if not flips:
+            return state
+        from repro.sdc.checksum import named_leaves
+        import jax
+
+        names = [n for n, _ in named_leaves(state)]
+        leaves = [v for _, v in named_leaves(state)]
+        for leaf_name, bit in flips:
+            if leaf_name not in names:
+                raise KeyError(f"no state leaf {leaf_name!r}; have "
+                               f"{names[:8]}...")
+            i = names.index(leaf_name)
+            leaves[i] = flip_bit(leaves[i], bit)
+            self.sdc_injected.append((step, leaf_name, bit))
+        treedef = jax.tree_util.tree_structure(state)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 class StragglerWatchdog:

@@ -3,8 +3,16 @@
     T_FO = sqrt(2 (mu - D + R) C)
 
 with mu = system MTBF (per-node MTBF / node count), D = downtime, R =
-recovery time, C = checkpoint cost.  We follow the paper's formula [14]
-verbatim (note the paper-printed sign convention ``mu - D + R``).
+recovery time, C = checkpoint cost.
+
+The bracket's sign convention is a documented discrepancy: the paper
+prints eq. (1) as ``mu - D + R`` (formula="paper", followed verbatim by
+default), while the standard Young/Daly derivation subtracts BOTH the
+downtime and the recovery time from the failure-free window —
+``mu - D - R`` (formula="standard").  The standard bracket is never
+larger, so it yields an equal-or-shorter period (checkpoints at least as
+often).  For realistic fleets mu >> D + R and the two differ by well
+under a percent; both are clamped at a small positive floor.
 
 The adaptive policy estimates C online (EMA of measured save cost) and
 converts the optimal period into a step interval using the measured step
@@ -18,10 +26,22 @@ import math
 from typing import Optional
 
 
+FORMULAS = ("paper", "standard")
+
+
 def young_daly_period(mtbf_seconds: float, checkpoint_cost_s: float,
-                      restart_s: float = 0.0, downtime_s: float = 0.0) -> float:
-    """Paper eq. (1).  Clamps the bracket at a small positive floor."""
-    bracket = max(mtbf_seconds - downtime_s + restart_s, 1e-9)
+                      restart_s: float = 0.0, downtime_s: float = 0.0,
+                      formula: str = "paper") -> float:
+    """Paper eq. (1).  Clamps the bracket at a small positive floor.
+
+    formula="paper": bracket = mu - D + R, as the paper prints it.
+    formula="standard": bracket = mu - D - R, the textbook Young/Daly
+    convention (see module docstring for the discrepancy).
+    """
+    if formula not in FORMULAS:
+        raise ValueError(f"formula {formula!r} not in {FORMULAS}")
+    sign = 1.0 if formula == "paper" else -1.0
+    bracket = max(mtbf_seconds - downtime_s + sign * restart_s, 1e-9)
     return math.sqrt(2.0 * bracket * checkpoint_cost_s)
 
 
@@ -48,9 +68,12 @@ class CheckpointPolicy:
 
     def __init__(self, mode: str = "young_daly", every_n: int = 1,
                  system: Optional[SystemModel] = None, ema: float = 0.7,
-                 min_interval: int = 1, max_interval: int = 100_000):
+                 min_interval: int = 1, max_interval: int = 100_000,
+                 formula: str = "paper"):
         assert mode in ("every_n", "young_daly"), mode
+        assert formula in FORMULAS, formula
         self.mode = mode
+        self.formula = formula
         self.every_n = max(int(every_n), 1)
         self.system = system or SystemModel()
         self._ema = ema
@@ -77,7 +100,8 @@ class CheckpointPolicy:
             return self.min_interval  # bootstrap: measure C asap
         t_opt = young_daly_period(self.system.system_mtbf, self.ckpt_cost_s,
                                   self.system.restart_seconds,
-                                  self.system.downtime_seconds)
+                                  self.system.downtime_seconds,
+                                  formula=self.formula)
         steps = int(round(t_opt / max(self.step_time_s, 1e-9)))
         return max(self.min_interval, min(steps, self.max_interval))
 

@@ -13,6 +13,9 @@ Kernels (DESIGN.md S3):
                     compression: the paper-aligned kernel, shrinks the
                     Young/Daly C term).
   rmsnorm         — fused RMSNorm.
+  abft_matmul     — checksum-extended matmul (Huang/Abraham ABFT): detects
+                    and corrects a single corrupted output element; the
+                    tier-1 SDC guard (docs/sdc.md).
 
 All validated against their oracles in interpret mode on CPU (this container
 has no TPU); on TPU hardware the same pallas_call lowers natively.

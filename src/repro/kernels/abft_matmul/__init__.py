@@ -1,0 +1,6 @@
+from repro.kernels.abft_matmul.ops import (abft_dot, abft_matmul,
+                                           verify_and_correct)
+from repro.kernels.abft_matmul.ref import abft_matmul_ref, encode_ref
+
+__all__ = ["abft_matmul", "abft_dot", "verify_and_correct",
+           "abft_matmul_ref", "encode_ref"]

@@ -1,0 +1,145 @@
+"""Public ABFT matmul wrappers: encode -> multiply -> verify -> correct.
+
+``abft_matmul(a, b)`` returns the data product C plus a report of the
+checksum verification.  A single corrupted output element e at (i, j)
+shifts row-residual i and column-residual j by the same amount: the
+intersection locates it and C[i,j] -= d corrects it in place — no
+rollback.  Inconsistent or multiple residuals are flagged as detected but
+uncorrectable (the caller falls back to checkpoint rollback).
+
+Detection is thresholded: checksums ride through a different summation
+order than the data, so residuals are compared against a tolerance scaled
+by the row/column L1 mass (``rtol``) — corruption below fp accumulation
+noise is indistinguishable from rounding and passes, which is the
+standard ABFT trade on floating point.
+
+``abft_dot`` is the layer-facing twin of ``x @ w`` (arbitrary leading
+dims, silent single-error correction, result in x.dtype) used by the
+``impl="abft"`` opt-in in layers/ and models/.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.abft_matmul.kernel import matmul_f32
+from repro.kernels.abft_matmul.ref import encode_ref
+
+TILE = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def verify_and_correct(c_full, *, rtol: float = 1e-4, atol: float = 1e-5,
+                       correct: bool = True):
+    """Verify an extended product; returns (c, report).
+
+    report (jnp scalars, jit-friendly):
+      detected    any residual above tolerance
+      corrected   error isolated to one element (data or checksum) and,
+                  for a data element, fixed in the returned c
+      row, col    flagged coordinates (argmax residual; 0 when clean)
+      delta       the correction magnitude applied at (row, col)
+      bad_rows/bad_cols  residual counts (>1 of either => uncorrectable)
+    """
+    c = c_full[:-1, :-1]
+    row_check = c_full[:-1, -1]          # row sums of C via the extension
+    col_check = c_full[-1, :-1]          # column sums of C
+    abs_c = jnp.abs(c)
+    d_row = jnp.sum(c, axis=1) - row_check
+    d_col = jnp.sum(c, axis=0) - col_check
+    tol_row = atol + rtol * (jnp.sum(abs_c, axis=1) + jnp.abs(row_check))
+    tol_col = atol + rtol * (jnp.sum(abs_c, axis=0) + jnp.abs(col_check))
+    bad_row = jnp.abs(d_row) > tol_row
+    bad_col = jnp.abs(d_col) > tol_col
+    n_row = jnp.sum(bad_row)
+    n_col = jnp.sum(bad_col)
+    detected = (n_row + n_col) > 0
+    i = jnp.argmax(jnp.abs(d_row) * bad_row)
+    j = jnp.argmax(jnp.abs(d_col) * bad_col)
+    # one data element hit: both residuals trip, with consistent magnitude
+    single_data = ((n_row == 1) & (n_col == 1)
+                   & (jnp.abs(d_row[i] - d_col[j]) <= tol_row[i] + tol_col[j]))
+    # one checksum element hit: only its own residual trips; data is intact
+    checksum_only = ((n_row == 1) & (n_col == 0)) | \
+                    ((n_row == 0) & (n_col == 1))
+    corrected = detected & (single_data | checksum_only)
+    delta = jnp.where(single_data & correct, d_row[i], 0.0)
+    c = c.at[i, j].add(-delta)
+    report = {"detected": detected, "corrected": corrected,
+              "row": i, "col": j, "delta": delta,
+              "bad_rows": n_row, "bad_cols": n_col}
+    return c, report
+
+
+@functools.partial(jax.jit, static_argnames=("rtol", "atol", "correct",
+                                             "inject", "interpret"))
+def abft_matmul(a, b, *, rtol: float = 1e-4, atol: float = 1e-5,
+                correct: bool = True,
+                inject: Optional[Tuple[int, int, float]] = None,
+                interpret: Optional[bool] = None):
+    """a: (M, K), b: (K, N) -> (C (M, N) f32, report).
+
+    ``inject=(i, j, delta)`` perturbs extended-product element (i, j)
+    AFTER the multiply and BEFORE verification — the deterministic SDC
+    hook the tests and bench use (i == M / j == N hit the checksums).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    M, K = a.shape
+    N = b.shape[1]
+    a_ext, b_ext = encode_ref(a, b)
+    mp, np_, kp = (_round_up(M + 1, TILE), _round_up(N + 1, TILE),
+                   _round_up(K, TILE))
+    a_p = jnp.pad(a_ext, ((0, mp - M - 1), (0, kp - K)))
+    b_p = jnp.pad(b_ext, ((0, kp - K), (0, np_ - N - 1)))
+    c_full = matmul_f32(a_p, b_p, interpret=interpret)[:M + 1, :N + 1]
+    if inject is not None:
+        ii, jj, delta = inject
+        c_full = c_full.at[ii, jj].add(delta)
+    return verify_and_correct(c_full, rtol=rtol, atol=atol, correct=correct)
+
+
+@jax.custom_vjp
+def _abft_dot_2d(x2, w):
+    c, _ = abft_matmul(x2, w)
+    return c
+
+
+def _abft_dot_fwd(x2, w):
+    return _abft_dot_2d(x2, w), (x2, w)
+
+
+def _abft_dot_bwd(res, g):
+    # the backward contractions run through the same checksummed kernel —
+    # a flipped gradient element is corrected before it reaches the update
+    x2, w = res
+    dx, _ = abft_matmul(g, w.T.astype(jnp.float32))
+    dw, _ = abft_matmul(x2.T.astype(jnp.float32), g)
+    return dx.astype(x2.dtype), dw.astype(w.dtype)
+
+
+_abft_dot_2d.defvjp(_abft_dot_fwd, _abft_dot_bwd)
+
+
+def abft_dot(x, w):
+    """Drop-in checksummed ``x @ w``: x (..., K), w (K, N) -> (..., N).
+
+    Computes in fp32 (checksums on half precision would drown in rounding),
+    corrects a single corrupted output element silently, and returns in
+    x.dtype.  Differentiable: the custom VJP routes both backward
+    contractions through the checksummed kernel too.  Uncorrectable
+    corruption propagates to the loss, where the tier-3 sentinel catches
+    it.
+    """
+    shape = x.shape
+    c = _abft_dot_2d(x.reshape(-1, shape[-1]), w)
+    return c.reshape(shape[:-1] + (w.shape[-1],)).astype(x.dtype)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the ABFT checksum-extended matmul.
+
+Huang & Abraham's algorithm-based fault tolerance, the form Bosilca et al.
+apply to HPC linear algebra: extend A with a column-checksum row (the sum of
+A's rows) and B with a row-checksum column (the sum of B's columns); one
+multiply of the extended operands then yields C *and* its own row/column
+checksums, computed *through* the same hardware path as the data.  Any
+single corrupted output element perturbs exactly one row check and one
+column check — their intersection locates it, their magnitude corrects it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def encode_ref(a, b):
+    """(M,K),(K,N) -> checksum-extended (M+1,K),(K,N+1) in fp32."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    a_ext = jnp.concatenate([a, jnp.sum(a, axis=0, keepdims=True)], axis=0)
+    b_ext = jnp.concatenate([b, jnp.sum(b, axis=1, keepdims=True)], axis=1)
+    return a_ext, b_ext
+
+
+def abft_matmul_ref(a, b):
+    """Extended product C_full (M+1, N+1): data block C = C_full[:-1,:-1],
+    column-checksum row C_full[-1,:-1], row-checksum column C_full[:-1,-1]."""
+    a_ext, b_ext = encode_ref(a, b)
+    return jnp.dot(a_ext, b_ext, preferred_element_type=jnp.float32)
+
+
+def residuals_ref(c_full):
+    """Row/column checksum residuals of an extended product.
+
+    d_row[i] = sum_j C[i,j] - rowcheck[i]   (nonzero -> error in row i)
+    d_col[j] = sum_i C[i,j] - colcheck[j]   (nonzero -> error in col j)
+    """
+    c = c_full[:-1, :-1]
+    col_check = c_full[-1, :-1]     # checksum row: column sums of C
+    row_check = c_full[:-1, -1]     # checksum col: row sums of C
+    d_row = jnp.sum(c, axis=1) - row_check
+    d_col = jnp.sum(c, axis=0) - col_check
+    return d_row, d_col

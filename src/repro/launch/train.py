@@ -8,6 +8,11 @@ Wires the full DeLIA stack around the BSP training loop: checkpoint policy
 codec), termination-signal detection, optional UDP heartbeats, straggler
 watchdog, and automatic restore-on-restart.  ``--inject-failure N`` simulates
 a fail-stop at step N and recovers (the paper's fault model, end to end).
+
+SDC guard (docs/sdc.md): ``--scrub``/``--sentinel`` turn on the tier-2/3
+detectors, ``--abft`` opts the projection matmuls into the checksummed
+kernel, and ``--inject-bitflip STEP:LEAF:BIT`` flips one state bit mid-run
+to watch detection + rollback happen.
 """
 from __future__ import annotations
 
@@ -69,6 +74,16 @@ def main(argv=None) -> int:
     ap.add_argument("--heartbeat", action="store_true")
     ap.add_argument("--inject-failure", type=int, default=0,
                     help="simulate a fail-stop at this step")
+    ap.add_argument("--scrub", action="store_true",
+                    help="tier-2 SDC: rotating state-checksum scrubber")
+    ap.add_argument("--scrub-fraction", type=float, default=0.25)
+    ap.add_argument("--sentinel", action="store_true",
+                    help="tier-3 SDC: non-finite/loss-spike sentinel")
+    ap.add_argument("--abft", action="store_true",
+                    help="tier-1 SDC: checksummed projection matmuls")
+    ap.add_argument("--inject-bitflip", default="",
+                    help="STEP:LEAF:BIT, e.g. 50:params.embed.tok:30 — "
+                         "flip one state bit mid-run (SDC fault model)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -90,6 +105,9 @@ def main(argv=None) -> int:
         async_save=args.async_save,
         codec=args.codec,
         heartbeat=args.heartbeat,
+        scrub=args.scrub,
+        scrub_fraction=args.scrub_fraction,
+        sentinel=args.sentinel,
         system=SystemModel(node_mtbf_seconds=args.node_mtbf_hours * 3600,
                            num_nodes=args.num_nodes),
     )).start()
@@ -99,6 +117,7 @@ def main(argv=None) -> int:
         step_fn = jax.jit(
             make_train_step(cfg, microbatches=args.microbatches,
                             total_steps=args.steps,
+                            impl=("abft" if args.abft else None),
                             param_specs=specs["params"]),
             out_shardings=(shardings, None))
 
@@ -118,6 +137,10 @@ def main(argv=None) -> int:
         injector = None
         if args.inject_failure:
             injector = FaultInjector().schedule_failstop(args.inject_failure)
+        if args.inject_bitflip:
+            step_s, leaf, bit_s = args.inject_bitflip.split(":")
+            injector = injector or FaultInjector()
+            injector.schedule_bitflip(int(step_s), leaf, int(bit_s))
 
         def on_metrics(step, rec):
             if step % 10 == 0 or step == args.steps:
@@ -137,6 +160,9 @@ def main(argv=None) -> int:
     print(f"[train] {info['status']} in {wall:.1f}s; restarts="
           f"{info['restarts']}; checkpoints={n_saves}; "
           f"young-daly interval={dep.policy.interval_steps()} steps")
+    events = [h["event"] for h in info["history"] if "event" in h]
+    if events:
+        print(f"[train] failure/corruption events: {events}")
     dep.stop()
     return 0
 

@@ -31,12 +31,23 @@ def mlp_init(key, d_model: int, d_ff: int, act: str, dtype):
     return p
 
 
-def mlp_apply(params, x, act: str, compute_dtype):
+def _dot(x, w, impl):
+    if impl == "abft":
+        from repro.kernels.abft_matmul.ops import abft_dot
+
+        return abft_dot(x, w)
+    return x @ w
+
+
+def mlp_apply(params, x, act: str, compute_dtype, impl=None):
+    """``impl="abft"`` routes the projection matmuls through the
+    checksum-extended kernel (docs/sdc.md tier 1): single corrupted output
+    elements are located and corrected in place, at fp32 compute cost."""
     gated = act in ("silu", "gelu")
     fn = _act(act)
-    h = x @ params["w_in"].astype(compute_dtype)
+    h = _dot(x, params["w_in"].astype(compute_dtype), impl)
     if gated:
-        g = x @ params["w_gate"].astype(compute_dtype)
+        g = _dot(x, params["w_gate"].astype(compute_dtype), impl)
         h = fn(g) * h
     else:
         h = fn(h)
@@ -45,4 +56,4 @@ def mlp_apply(params, x, act: str, compute_dtype):
     # w_out's "model" sharding (otherwise GSPMD all-gathers the full weight
     # in the remat-backward region — EXPERIMENTS.md S Perf).
     h = constrain(h, P(DP_AXES, U, TP))
-    return h @ params["w_out"].astype(compute_dtype)
+    return _dot(h, params["w_out"].astype(compute_dtype), impl)

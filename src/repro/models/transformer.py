@@ -157,8 +157,15 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
 # layer application
 # --------------------------------------------------------------------------
 
-def _project(h, w, bias, cd):
-    y = jnp.einsum("bsd,dhk->bshk", h, w.astype(cd))
+def _project(h, w, bias, cd, impl=None):
+    if impl == "abft":
+        from repro.kernels.abft_matmul.ops import abft_dot
+
+        d, nh, hd = w.shape
+        y = abft_dot(h, w.astype(cd).reshape(d, nh * hd))
+        y = y.reshape(h.shape[:-1] + (nh, hd))
+    else:
+        y = jnp.einsum("bsd,dhk->bshk", h, w.astype(cd))
     if bias is not None:
         y = y + bias.astype(cd)
     return y
@@ -191,14 +198,19 @@ def _attn_apply(p, x, kind, cfg: ModelConfig, positions, cache=None,
     scale = cfg.query_scale or None
     window = cfg.window if kind == LOCAL else 0
     hmask = _head_mask(cfg)
+    # impl="abft" opts the projection matmuls into the checksummed kernel
+    # (docs/sdc.md tier 1); the attention core itself falls back to "auto"
+    proj_impl = "abft" if impl == "abft" else None
+    if impl == "abft":
+        impl = "auto"
 
     # SP: gather the bf16 residual BEFORE the norm — a gather placed after
     # would let GSPMD reshard the norm's fp32 internals (2x wire bytes).
     h = rms_norm(gathered(cfg, x), p["ln1"], cfg.norm_eps,
                  use_pallas=cfg.use_pallas)
-    q = _project(h, a["wq"], a.get("bq"), cd)
-    k = _project(h, a["wk"], a.get("bk"), cd)
-    v = _project(h, a["wv"], a.get("bv"), cd)
+    q = _project(h, a["wq"], a.get("bq"), cd, impl=proj_impl)
+    k = _project(h, a["wk"], a.get("bk"), cd, impl=proj_impl)
+    v = _project(h, a["wv"], a.get("bv"), cd, impl=proj_impl)
     q = constrain(q, P(DP_AXES, U, TP, U))
     if kind != BIDIR or cfg.rope_theta > 0:
         q, k = _rope_q_k(cfg, q, k, positions)
@@ -236,7 +248,14 @@ def _attn_apply(p, x, kind, cfg: ModelConfig, positions, cache=None,
     # pin o (and via transpose its cotangent) to head-TP sharding: keeps the
     # backward dot aligned with wo's "model" sharding (see mlp_apply)
     o = constrain(o, P(DP_AXES, U, TP, U))
-    o = jnp.einsum("bshk,hkd->bsd", o, a["wo"].astype(cd))
+    if proj_impl == "abft":
+        from repro.kernels.abft_matmul.ops import abft_dot
+
+        nh, hd, d = a["wo"].shape
+        o = abft_dot(o.reshape(B, S, nh * hd),
+                     a["wo"].astype(cd).reshape(nh * hd, d))
+    else:
+        o = jnp.einsum("bshk,hkd->bsd", o, a["wo"].astype(cd))
     if cfg.sandwich_norm:
         o = rms_norm(o, p["ln1_post"], cfg.norm_eps)
     x = x + o
@@ -251,7 +270,7 @@ def _attn_apply(p, x, kind, cfg: ModelConfig, positions, cache=None,
                            capacity_factor=cfg.capacity_factor,
                            act=_act(cfg.mlp_act), compute_dtype=cd)
     else:
-        m = mlp_apply(p["mlp"], h2, cfg.mlp_act, cd)
+        m = mlp_apply(p["mlp"], h2, cfg.mlp_act, cd, impl=proj_impl)
     if cfg.sandwich_norm:
         m = rms_norm(m, p["ln2_post"], cfg.norm_eps)
     x = x + m

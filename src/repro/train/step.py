@@ -106,7 +106,13 @@ def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4,
             "opt": new_opt,
             "rng": jax.random.fold_in(state["rng"], 1),
         }
-        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **metrics}
+        # tier-3 SDC guard (docs/sdc.md): non-finite loss or grad norm,
+        # folded into one device scalar — gnorm is a global reduction over
+        # every gradient leaf, so any non-finite grad poisons it too.  The
+        # host-side LossSentinel consumes this flag plus the loss EMA.
+        finite = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                       "nonfinite": (~finite).astype(jnp.float32), **metrics}
         return new_state, out_metrics
 
     return train_step

@@ -44,6 +44,54 @@ def test_young_daly_never_negative(mu, c, d, r):
     assert young_daly_period(mu, c, r, d) >= 0.0
 
 
+@given(mu=pos, c=pos, d=st.floats(0, 1e3), r=st.floats(0, 1e3))
+@settings(max_examples=100, deadline=None)
+def test_formula_standard_never_longer_than_paper(mu, c, d, r):
+    """The paper prints mu - D + R; textbook Young/Daly is mu - D - R.
+    The standard bracket is smaller by 2R, so its period can't exceed the
+    paper's — i.e. "standard" checkpoints at least as often."""
+    t_paper = young_daly_period(mu, c, r, d, formula="paper")
+    t_std = young_daly_period(mu, c, r, d, formula="standard")
+    assert t_std <= t_paper + 1e-12
+
+
+def test_formula_brackets_differ_by_2r():
+    mu, c, d, r = 3600.0, 0.5, 60.0, 120.0
+    t_paper = young_daly_period(mu, c, r, d, formula="paper")
+    t_std = young_daly_period(mu, c, r, d, formula="standard")
+    assert math.isclose(t_paper, math.sqrt(2 * (mu - d + r) * c))
+    assert math.isclose(t_std, math.sqrt(2 * (mu - d - r) * c))
+    assert t_std < t_paper
+
+
+def test_formula_rejects_unknown():
+    with pytest.raises(ValueError):
+        young_daly_period(100.0, 1.0, formula="bogus")
+
+
+def test_policy_threads_formula():
+    for formula in ("paper", "standard"):
+        p = CheckpointPolicy(mode="young_daly", formula=formula,
+                             system=SystemModel(node_mtbf_seconds=3600 * 100,
+                                                num_nodes=100))
+        for _ in range(5):
+            p.observe_step(1.0)
+        p.observe_checkpoint(0.5)
+        assert p.interval_steps() >= 1
+    # with mu ~ D + R the brackets diverge hard: paper ~ 2R, standard ~ floor
+    sys_edge = SystemModel(node_mtbf_seconds=180.0, num_nodes=1,
+                           restart_seconds=120.0, downtime_seconds=60.0)
+    p_paper = CheckpointPolicy(mode="young_daly", formula="paper",
+                               system=sys_edge)
+    p_std = CheckpointPolicy(mode="young_daly", formula="standard",
+                             system=sys_edge)
+    for p in (p_paper, p_std):
+        for _ in range(5):
+            p.observe_step(1.0)
+        p.observe_checkpoint(0.5)
+    assert p_std.interval_steps() <= p_paper.interval_steps()
+
+
 def test_every_n_policy():
     p = CheckpointPolicy(mode="every_n", every_n=3)
     fired = [s for s in range(1, 13) if p.should_checkpoint(s)
