@@ -1,9 +1,26 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the command ROADMAP.md pins, from any cwd.
+#
+#   scripts/tier1.sh            full tier-1 (what CI gates on)
+#   scripts/tier1.sh --fast     skip tests marked `slow` (the multi-device
+#                               E2E subprocesses) — ~4x faster inner loop
 set -euo pipefail
 cd "$(dirname "$0")/.."
 # the SDC suite is part of tier 1 (tests/test_sdc.py end-to-end + unit,
 # ABFT kernel-vs-oracle sweeps in tests/test_kernels.py); the full-tests
 # run below collects it — fail loudly if it ever goes missing
 test -f tests/test_sdc.py
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
+# the elastic failover suite likewise (tests/test_elastic_loop.py)
+test -f tests/test_elastic_loop.py
+ARGS=()
+for a in "$@"; do
+  if [ "$a" = "--fast" ]; then
+    ARGS+=(-m "not slow")
+  else
+    ARGS+=("$a")
+  fi
+done
+# ${ARGS[@]+...}: expanding an empty array under `set -u` is an error on
+# bash < 4.4 (stock macOS) — guard the no-argument invocation
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  exec python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}

@@ -1,10 +1,12 @@
 from repro.apps.fwi import (
     FWIConfig,
+    FWIData,
+    FWIShardData,
     forward_model,
     make_fwi_step,
     make_observed_data,
     run_fwi,
 )
 
-__all__ = ["FWIConfig", "forward_model", "make_fwi_step",
-           "make_observed_data", "run_fwi"]
+__all__ = ["FWIConfig", "FWIData", "FWIShardData", "forward_model",
+           "make_fwi_step", "make_observed_data", "run_fwi"]

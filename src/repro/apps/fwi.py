@@ -173,15 +173,82 @@ class FWIData:
         self.step = int(s["step"])
 
 
+class FWIShardData:
+    """Local-SCOPE FWI pipeline: shots are the DP unit (the paper spread 50
+    samples over 32 cores) and shard k owns the contiguous shot slice
+    ``[lo, hi)`` of the observed data plus its own cursor.
+
+    Each shard's ``{"step", "shot_lo", "shot_hi"}`` dict is saved as its
+    OWN checkpoint file (``local_s<k>.json``) and remapped onto the current
+    DP width on restore — the local-scope configuration the paper's
+    parallel module could not support.  The merged batch is always the full
+    shot set, so the inversion trajectory is width-independent."""
+
+    def __init__(self, d_obs, dp_width: int = 1):
+        self.d_obs = d_obs
+        self.n_shots = int(d_obs.shape[0])
+        self.step = 0
+        self.remapped_from: Optional[int] = None
+        self.repartition(dp_width)
+
+    def repartition(self, dp_width: int) -> None:
+        from repro.data.pipeline import even_spans
+
+        self.spans = even_spans(self.n_shots, dp_width)
+        self.dp_width = dp_width
+
+    def next_batch(self):
+        self.step += 1
+        return {"d_obs": self.d_obs}
+
+    def shard_batch(self, k: int):
+        """Shard k's slice of the observed data (what that worker alone
+        would propagate)."""
+        lo, hi = self.spans[k]
+        return {"d_obs": self.d_obs[lo:hi]}
+
+    # ---- DeLIA local scope ----
+    def state_dict(self):
+        return {"step": int(self.step), "width": int(self.dp_width),
+                "n_shots": int(self.n_shots), "scope": "sharded"}
+
+    def load_state_dict(self, s):
+        self.step = int(s["step"])
+
+    def shard_state_dicts(self):
+        return [{"shard": k, "width": int(self.dp_width),
+                 "step": int(self.step), "shot_lo": int(lo),
+                 "shot_hi": int(hi)}
+                for k, (lo, hi) in enumerate(self.spans)]
+
+    def load_shard_state_dicts(self, dicts):
+        dicts = sorted(dicts, key=lambda d: int(d["shard"]))
+        steps = {int(d["step"]) for d in dicts}
+        assert len(steps) == 1, f"saved shard cursors diverged: {steps}"
+        # the saved spans must tile the shot axis exactly, else data was
+        # lost between save and restore
+        covered = [(int(d["shot_lo"]), int(d["shot_hi"])) for d in dicts]
+        assert covered[0][0] == 0 and covered[-1][1] == self.n_shots \
+            and all(a[1] == b[0] for a, b in zip(covered, covered[1:])), \
+            f"saved shot spans do not tile [0, {self.n_shots}): {covered}"
+        self.remapped_from = len(dicts)
+        self.step = steps.pop()
+        self.repartition(self.dp_width)   # recompute spans for our width
+
+
 def run_fwi(cfg: FWIConfig, d_obs, *, dep=None, iterations: Optional[int] = None,
-            state=None, fault_injector=None):
+            state=None, fault_injector=None, local_scope: bool = False,
+            dp_width: int = 1):
     """Runs FWI; with ``dep`` the loop is DeLIA-protected (checkpoints etc.).
 
-    Returns (state, history)."""
+    ``local_scope=True`` uses the per-shard pipeline (``FWIShardData`` over
+    ``dp_width`` shot shards) so each shard's cursor/data-slice checkpoints
+    to its own file.  Returns (state, history)."""
     iterations = iterations or cfg.iterations
     step_fn = jax.jit(make_fwi_step(cfg))
     state = state if state is not None else init_fwi_state(cfg)
-    data = FWIData(d_obs)
+    data = (FWIShardData(d_obs, dp_width=dp_width) if local_scope
+            else FWIData(d_obs))
     if dep is None:
         hist = []
         for _ in range(int(state["step"]), iterations):

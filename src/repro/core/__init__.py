@@ -7,11 +7,13 @@ from repro.core.codec import CODECS, DeviceCodec, Int8BlockCodec
 from repro.core.coordinator import run_bsp, run_with_recovery
 from repro.core.io_engine import ShardIOEngine, crc32_array, write_npy
 from repro.core.elastic import (
+    NoSurvivorsError,
     largest_grid,
     rescale_global_batch,
     reshard_state,
     survivor_mesh,
 )
+from repro.core.elastic_loop import MeshEvent, run_elastic
 from repro.core.failures import (CorruptionDetected, FaultInjector,
                                  SimulatedFailure, StragglerWatchdog, flip_bit)
 from repro.core.heartbeat import HeartbeatEmitter, HeartbeatMonitor
@@ -31,6 +33,9 @@ __all__ = [
     "write_npy",
     "run_bsp",
     "run_with_recovery",
+    "run_elastic",
+    "MeshEvent",
+    "NoSurvivorsError",
     "survivor_mesh",
     "reshard_state",
     "rescale_global_batch",

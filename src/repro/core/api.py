@@ -83,6 +83,10 @@ class DependabilityConfig:
     heartbeat_period: float = 0.05
     heartbeat_timeout_factor: float = 5.0
     monitor_addr: Optional[Tuple[str, int]] = None  # monitor addr, hosts > 0
+    # heartbeat identities to watch when they differ from the number of
+    # checkpoint-writing hosts — single-process elastic simulations run one
+    # writer (this process) but several emitters (one per simulated host)
+    monitor_hosts: Optional[int] = None
     signal_detection: bool = True
     straggler_factor: float = 3.0
     system: SystemModel = dataclasses.field(default_factory=SystemModel)
@@ -121,6 +125,11 @@ class Dependability:
         self.signals: Optional[TerminationSignal] = None
         self.monitor: Optional[HeartbeatMonitor] = None
         self.emitter: Optional[HeartbeatEmitter] = None
+        # host-failure / host-rejoin callbacks handed to the heartbeat
+        # monitor at start() — the elastic layer sets these to drive mesh
+        # shrink/grow (core/elastic_loop.py)
+        self.on_host_failure = None
+        self.on_host_rejoin = None
         self._local_provider = None
         self._global_template = None
         self._global_shardings = None
@@ -135,8 +144,13 @@ class Dependability:
         if self.config.heartbeat:
             if self.host_id == 0:
                 self.monitor = HeartbeatMonitor(
-                    self.num_hosts, period=self.config.heartbeat_period,
-                    timeout_factor=self.config.heartbeat_timeout_factor
+                    self.config.monitor_hosts or self.num_hosts,
+                    period=self.config.heartbeat_period,
+                    timeout_factor=self.config.heartbeat_timeout_factor,
+                    on_failure=lambda h: (self.on_host_failure or
+                                          (lambda _: None))(h),
+                    on_rejoin=lambda h: (self.on_host_rejoin or
+                                         (lambda _: None))(h),
                 ).start()
             addr = (self.monitor.addr if self.monitor
                     else self.config.monitor_addr)
@@ -168,7 +182,12 @@ class Dependability:
         self._global_shardings = shardings
 
     def register_local_state(self, provider) -> None:
-        """provider: object with state_dict() / load_state_dict()."""
+        """provider: object with state_dict() / load_state_dict().
+
+        Local-SCOPE providers additionally expose shard_state_dicts() /
+        load_shard_state_dicts(dicts): one dict per DP shard, each saved as
+        its own checkpoint file and remapped by the provider on restore
+        when the shard count changed (elastic shrink/grow)."""
         self._local_provider = provider
 
     # ------------------------------------------------------------------
@@ -249,8 +268,12 @@ class Dependability:
             blocking = True
         local = (self._local_provider.state_dict()
                  if self._local_provider is not None else None)
+        shards = (self._local_provider.shard_state_dicts()
+                  if hasattr(self._local_provider, "shard_state_dicts")
+                  else None)
         t0 = time.perf_counter()
-        stats = self.manager.save(step, state, local, blocking=blocking)
+        stats = self.manager.save(step, state, local, local_shards=shards,
+                                  blocking=blocking)
         cost = time.perf_counter() - t0  # on-critical-path cost
         self.policy.observe_checkpoint(cost)
         self.policy.record_checkpoint(step)
@@ -275,9 +298,12 @@ class Dependability:
         shardings = (shardings if shardings is not None
                      else self._global_shardings)
         self.last_restore_skipped = []
+        wants_shards = hasattr(self._local_provider, "load_shard_state_dicts")
         if step is not None:
             state, local = self.manager.restore(step=step, like=like,
                                                 shardings=shardings)
+            shard_dicts = (self.manager.restore_local_shards(step)
+                           if wants_shards else [])
             got_step = step
         else:
             have = [s for s in self.manager.all_steps()
@@ -285,9 +311,26 @@ class Dependability:
             verified = sorted(self.verified_steps.intersection(have),
                               reverse=True)
             rest = sorted(set(have) - self.verified_steps, reverse=True)
-            state, local, got_step, skipped = self.manager.restore_latest(
-                like=like, shardings=shardings, candidates=verified + rest)
+            if wants_shards:
+                # load the shard files inside the walk-back, so a corrupt
+                # local_s<k>.json skips to an older checkpoint instead of
+                # failing the whole restore
+                (state, local, shard_dicts, got_step,
+                 skipped) = self.manager.restore_latest(
+                    like=like, shardings=shardings,
+                    candidates=verified + rest, with_local_shards=True)
+            else:
+                shard_dicts = []
+                state, local, got_step, skipped = self.manager.restore_latest(
+                    like=like, shardings=shardings,
+                    candidates=verified + rest)
             self.last_restore_skipped = skipped
-        if local is not None and self._local_provider is not None:
-            self._local_provider.load_state_dict(local)
+        if self._local_provider is not None:
+            if shard_dicts:
+                # per-shard local scope wins: the provider remaps the shard
+                # dicts onto its CURRENT width (which may differ from the
+                # width that saved them — elastic shrink/grow)
+                self._local_provider.load_shard_state_dicts(shard_dicts)
+            elif local is not None:
+                self._local_provider.load_state_dict(local)
         return state, got_step

@@ -58,9 +58,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codec import CODECS, Codec, DeviceCodec
-from repro.core.io_engine import ShardIOEngine, crc32_array, fsync_path, write_npy
+from repro.core.io_engine import (ShardIOEngine, crc32_array, fsync_path,
+                                  read_json, write_json, write_npy)
 
 _STEP_RE = re.compile(r"^step_(\d{8})$")
+_LOCAL_SHARD_RE = re.compile(r"^local_s(\d{5})\.json$")
 
 
 def _leaf_name(path) -> str:
@@ -213,7 +215,13 @@ class CheckpointManager:
         return path, nbytes
 
     def save(self, step: int, state, local_state: Optional[Dict] = None, *,
+             local_shards: Optional[List[Dict]] = None,
              blocking: bool = True) -> SaveStats:
+        """``local_state``: this host's local-scope dict (one file per host).
+        ``local_shards``: finer-grained local scope — one dict per DP shard
+        this host owns, each written as its OWN ``local_s<k>.json`` file so
+        restore can remap them individually when the shard count changes
+        (the feature the paper's FWI study could not enable)."""
         self.wait()  # double-buffer: drain previous async write
         t0 = time.perf_counter()
         named = _flatten_named(state)
@@ -233,15 +241,19 @@ class CheckpointManager:
                 "codec": self.codec_name,
                 "arrays": manifest_arrays,
             }
+            if local_shards is not None:
+                manifest["local_shards"] = [int(sd.get("shard", k))
+                                            for k, sd in
+                                            enumerate(local_shards)]
             mpath = os.path.join(staging, f"manifest_h{self.host_id}.json")
-            with open(mpath, "w") as f:
-                json.dump(manifest, f)
-            paths.append(mpath)
+            paths.append(write_json(mpath, manifest))
             if local_state is not None:
                 lpath = os.path.join(staging, f"local_h{self.host_id}.json")
-                with open(lpath, "w") as f:
-                    json.dump(local_state, f)
-                paths.append(lpath)
+                paths.append(write_json(lpath, local_state))
+            for k, sd in enumerate(local_shards or ()):
+                idx = int(sd.get("shard", k))
+                spath = os.path.join(staging, f"local_s{idx:05d}.json")
+                paths.append(write_json(spath, sd))
             apath = os.path.join(staging, f"ack_h{self.host_id}")
             open(apath, "w").close()
             paths.append(apath)
@@ -425,12 +437,27 @@ class CheckpointManager:
         local = None
         lp = os.path.join(final, f"local_h{self.host_id}.json")
         if os.path.exists(lp):
-            with open(lp) as f:
-                local = json.load(f)
+            local = read_json(lp)
         return state, local
 
+    def restore_local_shards(self, step: int) -> List[Dict]:
+        """Load every per-shard local-scope file of ``step``, ordered by
+        shard index (reads run on the I/O pool).  Returns [] when the
+        checkpoint predates local-scope saving — callers fall back to the
+        host-scope local dict."""
+        final = self._final(step)
+        found = []
+        for fn in os.listdir(final):
+            m = _LOCAL_SHARD_RE.match(fn)
+            if m:
+                found.append((int(m.group(1)), os.path.join(final, fn)))
+        found.sort()
+        return self._engine.read_many(
+            [functools.partial(read_json, p) for _, p in found])
+
     def restore_latest(self, *, like=None, shardings=None,
-                       candidates: Optional[List[int]] = None
+                       candidates: Optional[List[int]] = None,
+                       with_local_shards: bool = False
                        ) -> Tuple[Any, Optional[Dict], int, List[Tuple[int, str]]]:
         """Restore the newest checkpoint that actually verifies.
 
@@ -439,10 +466,16 @@ class CheckpointManager:
         history instead of failing the whole restore.  ``candidates``
         overrides the try-order (first entry tried first) — e.g. the
         SDC layer passes scrub-verified steps first.
+        ``with_local_shards``: also load the per-shard local-scope files as
+        part of candidate verification, so a corrupt/truncated
+        ``local_s<k>.json`` walks back like any other corrupt shard instead
+        of killing the restore.
 
-        Returns (state, local_state, step, skipped) where ``skipped`` is
-        [(step, reason), ...] for every checkpoint that had to be passed
-        over — callers should surface it: each entry is lost work.
+        Returns (state, local_state, step, skipped) — or, with
+        ``with_local_shards``, (state, local_state, shard_dicts, step,
+        skipped) — where ``skipped`` is [(step, reason), ...] for every
+        checkpoint that had to be passed over — callers should surface it:
+        each entry is lost work.
         """
         if candidates is None:
             candidates = list(reversed(self.all_steps()))
@@ -451,6 +484,9 @@ class CheckpointManager:
             try:
                 state, local = self.restore(step=s, like=like,
                                             shardings=shardings)
+                if with_local_shards:
+                    shard_dicts = self.restore_local_shards(s)
+                    return state, local, shard_dicts, s, skipped
                 return state, local, s, skipped
             except (IOError, ValueError, json.JSONDecodeError) as e:
                 # NOT KeyError: a template leaf missing from the manifest

@@ -34,20 +34,31 @@ from repro.core.failures import (CorruptionDetected, FaultInjector,
 def run_bsp(dep: Dependability, train_step: Callable, state, data,
             num_steps: int, *, fault_injector: Optional[FaultInjector] = None,
             on_metrics: Optional[Callable[[int, Dict], None]] = None,
+            stop_check: Optional[Callable[[], Optional[str]]] = None,
             final_save: bool = True) -> Tuple[Any, str, List[Dict]]:
     """Runs supersteps until ``num_steps`` or interruption.
 
-    Returns (state, status, history); status in {"done", "interrupted"}.
+    Returns (state, status, history); status in {"done", "interrupted",
+    "paused:<reason>"}.  ``stop_check`` is polled at each step boundary:
+    a non-None reason pauses the loop exactly like an interruption (final
+    save + flush) but reports the reason — the elastic layer uses it to
+    stop for non-failure events (e.g. a rejoining host growing the mesh).
     May raise SimulatedFailure (injected fail-stop) or CorruptionDetected
     (SDC tier tripped) — run_with_recovery handles both.
     """
     history: List[Dict] = []
     step = int(jax.device_get(state["step"]))
     while step < num_steps:
-        if dep.interrupted():
+        pause = stop_check() if stop_check is not None else None
+        if dep.interrupted() or pause is not None:
             if final_save:
                 dep.save(step, state, final=True)
-            return state, "interrupted", history
+            # flush: the final save may have queued behind a still-running
+            # async write — do not hand back control (or exit) with the
+            # checkpoint in flight
+            dep.manager.wait()
+            status = "interrupted" if pause is None else f"paused:{pause}"
+            return state, status, history
 
         if fault_injector is not None:
             # SDC strikes the at-rest state inside the record->verify window

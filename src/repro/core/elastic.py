@@ -19,8 +19,15 @@ from repro.sharding.api import resolve
 from repro.sharding.rules import state_specs
 
 
+class NoSurvivorsError(RuntimeError):
+    """Every device failed: there is nothing to rebuild a mesh from."""
+
+
 def largest_grid(n: int, model_axis: int) -> Tuple[int, int]:
     """(data, model) grid using at most n devices, keeping the model axis."""
+    if n <= 0:
+        raise NoSurvivorsError(
+            f"cannot build a device grid from {n} surviving devices")
     model = min(model_axis, n)
     while n % model:
         model -= 1
@@ -31,13 +38,35 @@ def survivor_mesh(failed_fraction_or_devices, model_axis: int = 1,
                   axis_names=("data", "model")) -> Mesh:
     """Builds a (data, model) mesh from surviving devices.
 
-    Accepts either an explicit device list or a number of failed devices to
-    exclude from ``jax.devices()``."""
+    Accepts an explicit device list, a number of failed devices to exclude
+    from ``jax.devices()``, or a true fraction (0 < f < 1) of failed
+    devices (``0.5`` excludes half, rounded to nearest).  Raises
+    ``NoSurvivorsError`` when nothing survives."""
     if isinstance(failed_fraction_or_devices, (list, tuple)):
         devices = list(failed_fraction_or_devices)
     else:
-        devices = list(jax.devices())[: len(jax.devices())
-                                      - int(failed_fraction_or_devices)]
+        all_devices = list(jax.devices())
+        n = len(all_devices)
+        x = failed_fraction_or_devices
+        if isinstance(x, (float, np.floating)):
+            # a float is a FRACTION of failed devices; reinterpreting 1.0
+            # (or 2.0) as a count would silently build a mesh containing
+            # dead devices — make the caller say what they mean
+            if not 0 <= x < 1:
+                raise ValueError(
+                    f"failed fraction must be in [0, 1), got {x!r}; pass an "
+                    "int for a device count or a device list")
+            failed = int(round(x * n))
+        else:
+            failed = int(x)
+        # clamp: a miscounted failure total (failed > n) must land in the
+        # no-survivors error below, not a negative slice that would build
+        # a "survivor" mesh containing dead devices
+        devices = all_devices[: max(n - failed, 0)]
+    if not devices:
+        raise NoSurvivorsError(
+            "no surviving devices to build a mesh from "
+            f"(failed_fraction_or_devices={failed_fraction_or_devices!r})")
     d, m = largest_grid(len(devices), model_axis)
     grid = np.array(devices[: d * m]).reshape(d, m)
     return Mesh(grid, axis_names)
@@ -58,8 +87,17 @@ def reshard_state(manager, cfg: ModelConfig, mesh: Mesh, like,
     return state, local, step
 
 
-def rescale_global_batch(global_batch: int, new_data_parallel: int) -> int:
-    """Keep per-replica batch constant when the DP width changes; round down
-    to a multiple of the new DP width."""
-    return max((global_batch // new_data_parallel) * new_data_parallel,
-               new_data_parallel)
+def rescale_global_batch(global_batch: int, old_data_parallel: int,
+                         new_data_parallel: int) -> int:
+    """Keep the per-replica batch constant when the DP width changes: the
+    new global batch is ``per_replica * new_dp`` (shrinks on failure, grows
+    on rejoin).  Compute/memory per device stays flat; optimizer hyper-
+    parameters tied to the global batch must be rescaled by the caller."""
+    if old_data_parallel <= 0 or new_data_parallel <= 0:
+        raise ValueError((old_data_parallel, new_data_parallel))
+    if global_batch % old_data_parallel:
+        raise ValueError(
+            f"global batch {global_batch} does not divide over "
+            f"{old_data_parallel} replicas")
+    per_replica = global_batch // old_data_parallel
+    return per_replica * new_data_parallel

@@ -1,0 +1,231 @@
+"""Elastic failover loop: heartbeat-driven mesh shrink/grow around the BSP
+coordinator.
+
+This closes the loop the modules below each solve half of:
+
+- ``core/heartbeat.py`` detects a dead host (no beats within the timeout)
+  and, via the monitor's ``on_failure`` callback, flips
+  ``Dependability.interrupted()`` so ``run_bsp`` pauses at the next
+  superstep boundary with a final checkpoint (global state + per-shard
+  local scope) flushed to disk.
+- ``core/elastic.py`` rebuilds a ``(data, model)`` mesh from the survivors
+  (``survivor_mesh``) and reshards any checkpoint onto it (span-based
+  reassembly in ``core/checkpoint.py``).
+
+``run_elastic`` wires them together and adds the data-plane half: the
+pipeline re-partitions its shard assignment for the new DP width
+(``data.repartition``) and the per-shard local state saved by the failing
+configuration is remapped onto the surviving one
+(``load_shard_state_dicts``).  Training then continues from the very step
+the failure interrupted — shrink on failure, grow when an excluded host
+starts beating again (rejoin), FTHP-MPI-style, without a relaunch.
+
+Single-process simulation: "hosts" are groups of devices
+(``launch.mesh.host_device_map``) with one ``HeartbeatEmitter`` each;
+pausing an emitter is a fail-stop, resuming it is a rejoin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.api import Dependability
+from repro.core.coordinator import run_bsp
+from repro.core.elastic import NoSurvivorsError, largest_grid, survivor_mesh
+from repro.sharding.api import mesh_context
+
+
+@dataclasses.dataclass
+class MeshEvent:
+    """One elasticity event in a run: the mesh shrank or grew."""
+    kind: str                 # "shrink" | "grow"
+    hosts: Tuple[int, ...]    # hosts lost (shrink) or rejoined (grow)
+    step: int                 # superstep the event interrupted
+    dp: int                   # data-parallel width AFTER the event
+
+    def as_record(self) -> Dict:
+        return {"step": self.step, "event":
+                f"{self.kind}:{','.join(map(str, self.hosts))}:dp={self.dp}"}
+
+
+class _HostLatch:
+    """Collects host notifications from the monitor's threads; drained by
+    the elastic loop at superstep boundaries.  Latching at callback time
+    matters: monitor state is mutable (a transient failure can self-clear
+    when a late beat lands), but an event that fired must still be
+    handled."""
+
+    def __init__(self, also: Optional[Callable[[int], None]] = None):
+        self._lock = threading.Lock()
+        self._hosts: set = set()
+        self._also = also            # pre-existing user callback, chained
+
+    def __call__(self, host: int) -> None:
+        with self._lock:
+            self._hosts.add(host)
+        if self._also is not None:
+            self._also(host)
+
+    def pending(self) -> List[int]:
+        with self._lock:
+            return sorted(self._hosts)
+
+    def take(self) -> List[int]:
+        with self._lock:
+            hosts, self._hosts = sorted(self._hosts), set()
+            return hosts
+
+
+def run_elastic(dep: Dependability, make_step: Callable, state, data,
+                num_steps: int, *,
+                host_devices: Dict[int, Sequence[Any]],
+                model_axis: int = 1,
+                like=None,
+                shardings_fn: Optional[Callable] = None,
+                allow_grow: bool = True,
+                max_events: int = 8,
+                fault_injector=None,
+                on_metrics=None,
+                on_event: Optional[Callable[[MeshEvent], None]] = None
+                ) -> Tuple[Any, Dict]:
+    """Train to ``num_steps`` surviving host failures and rejoins.
+
+    - ``make_step(mesh)`` -> train_step callable compiled for that mesh.
+    - ``host_devices``: host id -> the devices that host owns; a failed
+      host removes its whole group from the mesh.
+    - ``like``: template pytree for elastic restore (defaults to the
+      registered global template).
+    - ``shardings_fn(mesh)`` -> shardings pytree for the state on that
+      mesh (None: restore to unsharded arrays).
+    - ``data``: pipeline; when it has ``repartition(dp)`` its shard
+      assignment follows the mesh's DP width, and when it is a local-scope
+      provider (``shard_state_dicts``) its per-shard cursors ride in the
+      checkpoint and remap across widths.
+
+    Returns ``(state, info)`` with ``info["events"]`` the MeshEvent list
+    and ``info["history"]`` the merged superstep history.  Raises
+    ``NoSurvivorsError`` when every host is gone.
+    """
+    if dep.monitor is None:
+        raise ValueError(
+            "run_elastic requires the heartbeat monitor: construct "
+            "Dependability with heartbeat=True on host 0 and start() it")
+    monitor = dep.monitor
+    if dep._local_provider is None and hasattr(data, "state_dict"):
+        dep.register_local_state(data)
+    prev_on_failure = dep.on_host_failure
+    prev_on_rejoin = dep.on_host_rejoin
+    fail_latch = _HostLatch(also=prev_on_failure)
+    dep.on_host_failure = fail_latch
+    rejoin_latch = _HostLatch(also=prev_on_rejoin)
+    if allow_grow:
+        dep.on_host_rejoin = rejoin_latch
+
+    def stop_for_grow() -> Optional[str]:
+        pending = rejoin_latch.pending()
+        return f"rejoin:{','.join(map(str, pending))}" if pending else None
+
+    try:
+        return _drive(dep, make_step, state, data, num_steps, monitor,
+                      fail_latch, rejoin_latch, stop_for_grow,
+                      host_devices=host_devices, model_axis=model_axis,
+                      like=like, shardings_fn=shardings_fn,
+                      allow_grow=allow_grow, max_events=max_events,
+                      fault_injector=fault_injector, on_metrics=on_metrics,
+                      on_event=on_event)
+    finally:
+        # the latches are only meaningful inside this run: restore the
+        # user's callbacks so a later run (or user assignment) does not
+        # chain latch-around-latch with stale hosts inside
+        dep.on_host_failure = prev_on_failure
+        dep.on_host_rejoin = prev_on_rejoin
+
+
+def _drive(dep, make_step, state, data, num_steps, monitor, fail_latch,
+           rejoin_latch, stop_for_grow, *, host_devices, model_axis, like,
+           shardings_fn, allow_grow, max_events, fault_injector, on_metrics,
+           on_event) -> Tuple[Any, Dict]:
+    events: List[MeshEvent] = []
+    all_history: List[Dict] = []
+    active = sorted(host_devices)
+    first = True
+    while True:
+        devices = [d for h in active for d in host_devices[h]]
+        mesh = survivor_mesh(devices, model_axis=model_axis)
+        dp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+        if hasattr(data, "repartition"):
+            data.repartition(dp)
+        shardings = shardings_fn(mesh) if shardings_fn is not None else None
+        train_step = make_step(mesh)
+        with mesh_context(mesh):
+            if first:
+                if shardings is not None:
+                    state = jax.device_put(state, shardings)
+                first = False
+            else:
+                # the latest checkpoint is the final save run_bsp flushed
+                # when the event interrupted it: reshard it onto the new
+                # mesh; per-shard local state remaps inside restore_latest
+                # (the pipeline already has its new width)
+                state, got = dep.restore_latest(like=like,
+                                                shardings=shardings)
+                all_history.append({"step": got,
+                                    "event": f"resume:dp={dp}"})
+            state, status, hist = run_bsp(
+                dep, train_step, state, data, num_steps,
+                fault_injector=fault_injector, on_metrics=on_metrics,
+                stop_check=stop_for_grow if allow_grow else None)
+        all_history.extend(hist)
+        if status == "done":
+            return state, {"status": "done", "events": events,
+                           "history": all_history, "dp": dp}
+
+        cur = int(jax.device_get(state["step"]))
+        # union of latched failures (an event that fired must be handled
+        # even if a late beat cleared monitor.failed meanwhile — the host
+        # will rejoin properly through the excluded path) and current
+        # monitor state
+        failed = sorted((set(monitor.failed_hosts()) | set(fail_latch.take()))
+                        & set(active))
+        rejoined = [h for h in rejoin_latch.take()
+                    if h in host_devices and h not in active]
+        if failed:
+            for h in failed:
+                monitor.acknowledge(h)   # handled: stop flagging it
+            # a concurrent rejoin still counts (it just rides the same
+            # mesh rebuild instead of its own grow event)
+            active = sorted(set(active) | set(rejoined))
+            active = [h for h in active if h not in failed]
+            survivors = [d for h in active for d in host_devices[h]]
+            if not survivors:
+                raise NoSurvivorsError(
+                    f"all hosts failed at step {cur}: {sorted(failed)}")
+            event = MeshEvent("shrink", tuple(failed), cur,
+                              largest_grid(len(survivors), model_axis)[0])
+        elif rejoined:
+            active = sorted(set(active) | set(rejoined))
+            grown = [d for h in active for d in host_devices[h]]
+            event = MeshEvent("grow", tuple(rejoined), cur,
+                              largest_grid(len(grown), model_axis)[0])
+        elif status.startswith("paused:"):
+            # stale rejoin notification (host already active): keep going
+            continue
+        else:
+            # a termination signal, not an elasticity event: propagate the
+            # pause — the final checkpoint is already flushed
+            return state, {"status": "interrupted", "events": events,
+                           "history": all_history, "dp": dp}
+        events.append(event)
+        if len(events) > max_events:
+            # over the cap: record the event but do NOT process it (no
+            # on_event, no restore cycle) — a flapping host must not buy
+            # extra reshard work past the budget
+            raise RuntimeError(
+                f"mesh changed {len(events)} times (> max_events="
+                f"{max_events}); giving up: {events}")
+        all_history.append(event.as_record())
+        if on_event is not None:
+            on_event(event)

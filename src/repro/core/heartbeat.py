@@ -30,6 +30,12 @@ class HeartbeatEmitter:
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
         self._stop = threading.Event()
         self._seq = 0
+        # incarnation: stamped once per emitter lifetime, from THIS host's
+        # clock only — the monitor orders (inc, seq) pairs per host, so a
+        # restarted process (new inc) or resumed emitter (same inc, larger
+        # seq) is distinguishable from a stale in-flight datagram without
+        # ever comparing clocks across hosts
+        self._inc = time.time()
         self._thread: Optional[threading.Thread] = None
         self._paused = threading.Event()
 
@@ -49,7 +55,7 @@ class HeartbeatEmitter:
         while not self._stop.is_set():
             if not self._paused.is_set():
                 msg = json.dumps({"host": self.host_id, "seq": self._seq,
-                                  "t": time.time()}).encode()
+                                  "inc": self._inc, "t": time.time()}).encode()
                 try:
                     self._sock.sendto(msg, self.monitor_addr)
                 except OSError:
@@ -68,28 +74,57 @@ class HeartbeatMonitor:
     def __init__(self, num_hosts: int, period: float = 0.1,
                  timeout_factor: float = 5.0,
                  on_failure: Optional[Callable[[int], None]] = None,
+                 on_rejoin: Optional[Callable[[int], None]] = None,
+                 startup_grace: Optional[float] = None,
                  bind=("127.0.0.1", 0)):
         self.num_hosts = num_hosts
         self.period = period
         self.timeout = timeout_factor * period
+        # extra allowance before a never-seen host counts as failed: real
+        # launches skew (host k may reach start() well after host 0), so
+        # the first beat gets more slack than the steady-state timeout
+        self.startup_grace = (2.0 * self.timeout if startup_grace is None
+                              else startup_grace)
         self.on_failure = on_failure
+        self.on_rejoin = on_rejoin
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
         self._sock.bind(bind)
         self._sock.settimeout(period / 2)
         self.addr = self._sock.getsockname()
         self.last_seen: Dict[int, float] = {}
         self.failed: Dict[int, float] = {}
+        # acknowledged failures, out of the mesh
+        self.excluded: set = set()
+        # newest (inc, seq) accepted per host: a datagram at or below it is
+        # a stale in-flight beat, not a rejoin
+        self._last_beat: Dict[int, tuple] = {}
         self._stop = threading.Event()
         self._threads = []
         self._lock = threading.Lock()
 
     def start(self):
+        # Seed last_seen for every expected host so one that is silent from
+        # birth still trips the timeout (it has no beat to populate the dict
+        # with otherwise — it would never be declared failed).  Seeded into
+        # the future by startup_grace: launch skew must not read as death.
+        seed = time.time() + self.startup_grace
+        with self._lock:
+            for h in range(self.num_hosts):
+                self.last_seen.setdefault(h, seed)
         t1 = threading.Thread(target=self._recv_loop, daemon=True)
         t2 = threading.Thread(target=self._check_loop, daemon=True)
         self._threads = [t1, t2]
         t1.start()
         t2.start()
         return self
+
+    def acknowledge(self, host: int) -> None:
+        """The recovery layer handled this failure: stop counting the host
+        as failed and stop monitoring it until it beats again (rejoin)."""
+        with self._lock:
+            self.failed.pop(host, None)
+            self.last_seen.pop(host, None)
+            self.excluded.add(host)
 
     def _recv_loop(self):
         while not self._stop.is_set():
@@ -103,28 +138,52 @@ class HeartbeatMonitor:
                 msg = json.loads(data.decode())
             except (ValueError, UnicodeDecodeError):
                 continue
+            rejoined = None
             with self._lock:
                 h = int(msg["host"])
+                beat = (float(msg.get("inc", 0.0)), int(msg.get("seq", 0)))
+                if h in self.excluded:
+                    # only a beat NEWER than everything accepted before the
+                    # failure is a rejoin (same emitter resumed: same inc,
+                    # larger seq; restarted process: larger inc).  A stale
+                    # in-flight datagram compares <= and growing the mesh
+                    # back onto a dead host would just re-fail it.  Both
+                    # sides of the comparison come from the same host's
+                    # clock, so cross-host skew cannot break it.
+                    if beat <= self._last_beat.get(h, (0.0, -1)):
+                        continue
+                    self.excluded.discard(h)
+                    rejoined = h
+                if beat > self._last_beat.get(h, (0.0, -1)):
+                    self._last_beat[h] = beat
                 self.last_seen[h] = time.time()
                 # a failed host beating again = recovered (failover/rejoin)
                 self.failed.pop(h, None)
+            if rejoined is not None and self.on_rejoin:
+                self.on_rejoin(rejoined)
 
     def _check_loop(self):
         while not self._stop.is_set():
             now = time.time()
+            newly_failed = []
             with self._lock:
                 for h, seen in list(self.last_seen.items()):
                     if h in self.failed:
                         continue
                     if now - seen > self.timeout:
                         self.failed[h] = now
-                        if self.on_failure:
-                            self.on_failure(h)
+                        newly_failed.append(h)
+            # callbacks run OUTSIDE the lock: handlers may call back into
+            # the monitor (acknowledge, failed_hosts, ...) without deadlock
+            if self.on_failure:
+                for h in newly_failed:
+                    self.on_failure(h)
             time.sleep(self.period / 2)
 
     def alive_hosts(self):
         with self._lock:
-            return sorted(h for h in self.last_seen if h not in self.failed)
+            return sorted(h for h in self.last_seen
+                          if h not in self.failed and h not in self.excluded)
 
     def failed_hosts(self):
         with self._lock:

@@ -23,11 +23,12 @@ implementation pays on top of that:
 """
 from __future__ import annotations
 
+import json
 import os
 import threading
 import zlib
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, List, Sequence, Tuple
+from typing import Any, Callable, List, Sequence, Tuple
 
 import numpy as np
 
@@ -89,6 +90,22 @@ def write_npy(path: str, arrays, *, fsync: bool = False,
         if fsync:
             os.fsync(f.fileno())
     return nbytes, crc & 0xFFFFFFFF
+
+
+def write_json(path: str, obj: Any, *, fsync: bool = False) -> str:
+    """Write one JSON sidecar (manifest, local-scope shard state); returns
+    ``path`` so callers can collect it for the batched-fsync barrier."""
+    with open(path, "w") as f:
+        json.dump(obj, f)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
+    return path
+
+
+def read_json(path: str) -> Any:
+    with open(path) as f:
+        return json.load(f)
 
 
 def fsync_path(path: str) -> None:

@@ -1,3 +1,4 @@
-from repro.data.pipeline import SyntheticLMData, make_pipeline
+from repro.data.pipeline import (ShardedPipeline, SyntheticLMData,
+                                 make_pipeline)
 
-__all__ = ["SyntheticLMData", "make_pipeline"]
+__all__ = ["ShardedPipeline", "SyntheticLMData", "make_pipeline"]

@@ -32,3 +32,15 @@ def make_host_mesh(data: int = 1, model: int = 1, axis_names=("data", "model")):
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
     return make_mesh_compat((data, model), axis_names)
+
+
+def host_device_map(num_hosts: int, devices=None):
+    """Partition the visible devices into per-host groups: host i owns a
+    contiguous equal slice.  The elastic layer (core/elastic_loop.py)
+    shrinks/grows meshes host-group-wise, mirroring how a real failure
+    takes out a whole host's devices at once."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    assert num_hosts > 0 and n % num_hosts == 0, (n, num_hosts)
+    per = n // num_hosts
+    return {h: devices[h * per:(h + 1) * per] for h in range(num_hosts)}

@@ -233,3 +233,66 @@ def test_restore_specific_step(tmp_path):
     r2, _ = mgr.restore(step=2, like=_state())
     assert np.array_equal(np.asarray(r2["params"]["w"]),
                           np.asarray(_state(key=2)["params"]["w"]))
+
+
+# ---- local-SCOPE shard files (elastic failover loop) ----
+
+def test_local_shards_saved_as_own_files_and_restored_in_order(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state()
+    shards = [{"shard": k, "step": 5, "cursor": 10 + k} for k in range(3)]
+    mgr.save(5, st, {"step": 5}, local_shards=shards)
+    final = os.path.join(str(tmp_path), "step_00000005")
+    files = sorted(f for f in os.listdir(final) if f.startswith("local_s"))
+    assert files == ["local_s00000.json", "local_s00001.json",
+                     "local_s00002.json"]
+    got = mgr.restore_local_shards(5)
+    assert got == shards                   # ordered by shard index
+    # host-scope local state still rides alongside
+    _, local = mgr.restore(like=st, step=5)
+    assert local == {"step": 5}
+
+
+def test_restore_local_shards_empty_for_legacy_checkpoints(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state()
+    mgr.save(1, st, {"cursor": 2})
+    assert mgr.restore_local_shards(1) == []
+
+
+def test_local_shards_survive_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state()
+    shards = [{"shard": k, "v": k * k} for k in range(4)]
+    mgr.save(2, st, None, local_shards=shards, blocking=False)
+    mgr.wait()
+    assert mgr.restore_local_shards(2) == shards
+
+
+def test_manifest_records_local_shard_indices(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, _state(), None,
+             local_shards=[{"shard": 1, "x": 0}, {"shard": 0, "x": 1}])
+    with open(os.path.join(str(tmp_path), "step_00000003",
+                           "manifest_h0.json")) as f:
+        man = json.load(f)
+    assert man["local_shards"] == [1, 0]
+
+
+def test_corrupt_local_shard_walks_back_like_any_corrupt_shard(tmp_path):
+    """A truncated local_s<k>.json must not kill the restore: with
+    with_local_shards the walk-back treats it like a CRC failure and
+    falls back to the previous checkpoint."""
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state()
+    for s in (1, 2):
+        mgr.save(s, st, {"step": s},
+                 local_shards=[{"shard": 0, "step": s}])
+    bad = os.path.join(str(tmp_path), "step_00000002", "local_s00000.json")
+    with open(bad, "w") as f:
+        f.write('{"shard": 0, "st')           # truncated mid-write
+    state, local, shards, got, skipped = mgr.restore_latest(
+        like=st, with_local_shards=True)
+    assert got == 1                           # walked back past step 2
+    assert shards == [{"shard": 0, "step": 1}]
+    assert skipped and skipped[0][0] == 2

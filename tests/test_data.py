@@ -61,3 +61,4 @@ def test_embedding_input_pipeline():
     b = p.next_batch()
     assert b["embeddings"].shape == (2, 8, cfg.d_model)
     assert b["positions"].shape == (3, 2, 8)
+

@@ -1,0 +1,93 @@
+"""Slice shard mode + local-scope shard remapping (elastic).
+
+Separate from test_data.py: that module is gated on hypothesis, and these
+tests must run everywhere (tier-1 collects them for the failover loop)."""
+import numpy as np
+import pytest
+
+from repro.data import ShardedPipeline, make_pipeline
+from repro.models import get_config
+
+CFG = get_config("granite-3-8b", tiny=True)
+
+
+def _tok(b):
+    return np.asarray(b["tokens"])
+
+def test_slice_mode_global_batch_is_width_independent():
+    """The merged global batch must be identical for ANY DP width — the
+    invariant the elastic failover loop relies on to keep the loss
+    trajectory unchanged across a mesh shrink/grow."""
+    ref = ShardedPipeline(CFG, 8, 4, dp_width=1, seed=7)
+    for width in (2, 4):
+        p = ShardedPipeline(CFG, 8, 4, dp_width=width, seed=7)
+        for _ in range(3):
+            a, b = ref.next_batch(), p.next_batch()
+            for k in a:
+                assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), k
+        ref = ShardedPipeline(CFG, 8, 4, dp_width=1, seed=7)
+
+
+def test_slice_shards_tile_the_global_batch():
+    full = make_pipeline(CFG, 8, 4, seed=1, shard_mode="slice")
+    parts = [make_pipeline(CFG, 8, 4, seed=1, host_id=i, num_hosts=2,
+                           shard_mode="slice") for i in range(2)]
+    fb = _tok(full.peek_batch(0))
+    got = np.concatenate([_tok(p.peek_batch(0)) for p in parts], axis=0)
+    assert np.array_equal(fb, got)
+
+
+def test_shard_state_remap_across_widths():
+    """Per-shard cursors saved at width 4 restore onto width 2 (shrink)
+    and width 1 (full collapse) with the stream continuing exactly."""
+    ref = ShardedPipeline(CFG, 8, 4, dp_width=1, seed=0)
+    stream = [_tok(ref.next_batch()) for _ in range(8)]
+
+    p4 = ShardedPipeline(CFG, 8, 4, dp_width=4, seed=0)
+    for _ in range(3):
+        p4.next_batch()
+    saved = p4.shard_state_dicts()
+    assert len(saved) == 4 and all(d["mode"] == "slice" for d in saved)
+    assert all("rng" in d for d in saved)          # per-shard RNG recorded
+
+    for new_width in (2, 1):
+        q = ShardedPipeline(CFG, 8, 4, dp_width=new_width, seed=0)
+        q.load_shard_state_dicts([dict(d) for d in saved])
+        assert q.step == 3 and q.remapped_from == 4
+        for i in range(3, 8):
+            assert np.array_equal(_tok(q.next_batch()), stream[i]), i
+
+
+def test_fold_mode_rejects_cross_width_restore():
+    p = make_pipeline(CFG, 8, 4, seed=0, num_hosts=2, host_id=0)
+    saved = p.state_dict()
+    q = make_pipeline(CFG, 8, 4, seed=0, num_hosts=4, host_id=0)
+    with pytest.raises(AssertionError, match="width"):
+        q.load_state_dict(saved)
+
+
+def test_repartition_to_non_divisor_width():
+    """An elastic shrink can land on ANY survivor count: widths that do
+    not divide the global batch get near-equal spans that still tile it."""
+    p = ShardedPipeline(CFG, 8, 4, dp_width=4, seed=0)
+    full = _tok(p.next_batch())
+    p.repartition(3)                      # 4 rows over 3 shards: 1/2/1
+    assert p.dp_width == 3 and p.step == 1
+    assert [s.host_batch for s in p.shards] == [1, 2, 1]
+    spans = [(s.row_lo, s.row_hi) for s in p.shards]
+    assert spans[0][0] == 0 and spans[-1][1] == 4
+    assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+    got = np.concatenate([np.asarray(s.peek_batch(0)["tokens"])
+                          for s in p.shards], axis=0)
+    assert np.array_equal(got, full)      # merged stream unchanged
+    with pytest.raises(AssertionError):
+        p.repartition(5)                  # more shards than rows
+
+
+def test_corrupted_shard_rng_record_is_rejected():
+    p = ShardedPipeline(CFG, 8, 4, dp_width=2, seed=0)
+    saved = [dict(d) for d in p.shard_state_dicts()]
+    saved[1]["rng"] = [123, 456]          # corrupted record
+    q = ShardedPipeline(CFG, 8, 4, dp_width=2, seed=0)
+    with pytest.raises(AssertionError, match="RNG"):
+        q.load_shard_state_dicts(saved)

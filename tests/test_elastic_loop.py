@@ -1,0 +1,195 @@
+"""E2E elastic failover: heartbeat-driven mesh shrink/grow
+(core/elastic_loop.run_elastic) with local-scope shard checkpointing.
+
+Multi-device, so each test runs a subprocess with
+--xla_force_host_platform_device_count set (the main test process must keep
+the default single CPU device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# shared by every scenario: 2 simulated hosts x 4 devices, tp=2; slice-mode
+# pipeline so the merged global batch is identical at any DP width
+_PRELUDE = """
+import time, tempfile
+import jax
+import numpy as np
+from repro.core import (Dependability, DependabilityConfig, HeartbeatEmitter,
+                        run_elastic)
+from repro.data import ShardedPipeline
+from repro.launch.mesh import host_device_map
+from repro.models import get_config
+from repro.sharding.api import resolve
+from repro.sharding.rules import state_specs
+from repro.train import init_state, make_train_step
+
+cfg = get_config("granite-3-8b", tiny=True)
+KEY = jax.random.PRNGKey(0)
+PERIOD = 0.05
+
+def shardings_for(mesh):
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    specs = state_specs(cfg, tp)
+    return jax.tree.map(lambda s: resolve(s, mesh), specs,
+                        is_leaf=lambda x: x.__class__.__name__ ==
+                        "PartitionSpec")
+
+def make_step_for(steps):
+    def make_step(mesh):
+        return jax.jit(make_train_step(cfg, total_steps=steps),
+                       out_shardings=(shardings_for(mesh), None))
+    return make_step
+
+def make_dep(d, monitor_hosts=2):
+    return Dependability(DependabilityConfig(
+        checkpoint_dir=d, policy_mode="every_n", every_n=2,
+        heartbeat=True, heartbeat_period=PERIOD,
+        heartbeat_timeout_factor=5.0, signal_detection=False,
+        monitor_hosts=monitor_hosts), host_id=0, num_hosts=1).start()
+"""
+
+
+def _run(script: str, devices: int = 8, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    p = subprocess.run(
+        [sys.executable, "-c", _PRELUDE + textwrap.dedent(script)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+@pytest.mark.slow
+def test_failover_shrink_matches_uninterrupted_run(tmp_path):
+    """Emitter pause -> monitor detection -> on_failure exactly once ->
+    survivor mesh rebuild -> resharded restore of global AND per-shard
+    local state -> loss history matches the uninterrupted run."""
+    _run(f"""
+    STEPS = 10
+
+    # reference: uninterrupted slice-mode run on a single device
+    ref_data = ShardedPipeline(cfg, 16, 4, dp_width=1)
+    ref_step = jax.jit(make_train_step(cfg, total_steps=STEPS))
+    ref = init_state(cfg, KEY)
+    ref_losses = []
+    for _ in range(STEPS):
+        ref, m = ref_step(ref, ref_data.next_batch())
+        ref_losses.append(float(m["loss"]))
+
+    hosts = host_device_map(2)
+    dep = make_dep(r"{tmp_path}")
+    failures = []
+    dep.on_host_failure = failures.append
+    em1 = HeartbeatEmitter(1, dep.monitor.addr, PERIOD).start()
+
+    data = ShardedPipeline(cfg, 16, 4, dp_width=4)
+    state = init_state(cfg, KEY)
+    template = jax.eval_shape(lambda: init_state(cfg, KEY))
+
+    paused = {{"done": False}}
+    def on_metrics(s, rec):
+        if s == 3 and not paused["done"]:
+            paused["done"] = True
+            em1.pause()                   # fail-stop: beats just stop
+            time.sleep(6 * PERIOD)        # monitor notices by next boundary
+
+    state, info = run_elastic(dep, make_step_for(STEPS), state, data, STEPS,
+                              host_devices=hosts, model_axis=2,
+                              like=template, shardings_fn=shardings_for,
+                              on_metrics=on_metrics)
+    assert info["status"] == "done"
+    assert failures == [1], failures      # fired exactly once
+    assert [e.kind for e in info["events"]] == ["shrink"]
+    assert info["events"][0].hosts == (1,)
+    assert info["dp"] == 2                # (2,2) survivor mesh
+    # per-shard local scope: 4 shard files remapped onto 2 shards
+    assert data.dp_width == 2 and data.remapped_from == 4
+    losses = [h["loss"] for h in info["history"] if "loss" in h]
+    assert len(losses) == STEPS, losses   # no lost or repeated steps
+    # same data stream either side of the failure -> same trajectory up to
+    # bf16 cross-mesh reduction-order noise (see test_elastic_mesh notes)
+    for i, (a, b) in enumerate(zip(losses, ref_losses)):
+        assert abs(a - b) < 0.15, (i, a, b)
+    em1.stop(); dep.stop()
+    print("shrink failover OK", losses[-1], ref_losses[-1])
+    """, devices=8)
+
+
+@pytest.mark.slow
+def test_failover_grow_on_rejoin(tmp_path):
+    """Shrink on pause, then the emitter resumes: the monitor reports the
+    rejoin, the loop pauses at a step boundary and grows the mesh back."""
+    _run(f"""
+    STEPS = 14
+    hosts = host_device_map(2)
+    dep = make_dep(r"{tmp_path}")
+    em1 = HeartbeatEmitter(1, dep.monitor.addr, PERIOD).start()
+
+    data = ShardedPipeline(cfg, 16, 4, dp_width=4)
+    state = init_state(cfg, KEY)
+    template = jax.eval_shape(lambda: init_state(cfg, KEY))
+
+    phase = {{"n": 0}}
+    def on_metrics(s, rec):
+        if s == 3 and phase["n"] == 0:
+            phase["n"] = 1
+            em1.pause()
+            time.sleep(6 * PERIOD)
+        elif s == 7 and phase["n"] == 1:
+            phase["n"] = 2
+            em1.resume()                  # failover: the host comes back
+            time.sleep(4 * PERIOD)
+
+    state, info = run_elastic(dep, make_step_for(STEPS), state, data, STEPS,
+                              host_devices=hosts, model_axis=2,
+                              like=template, shardings_fn=shardings_for,
+                              on_metrics=on_metrics)
+    assert info["status"] == "done"
+    kinds = [e.kind for e in info["events"]]
+    assert kinds == ["shrink", "grow"], kinds
+    assert info["dp"] == 4 and data.dp_width == 4
+    losses = [h["loss"] for h in info["history"] if "loss" in h]
+    assert len(losses) == STEPS
+    em1.stop(); dep.stop()
+    print("grow on rejoin OK")
+    """, devices=8)
+
+
+@pytest.mark.slow
+def test_all_hosts_failed_raises_no_survivors(tmp_path):
+    """Every emitter pausing must surface NoSurvivorsError, not a
+    ZeroDivisionError from the grid math."""
+    _run(f"""
+    from repro.core import NoSurvivorsError
+    STEPS = 10
+    hosts = host_device_map(2)
+    dep = make_dep(r"{tmp_path}", monitor_hosts=2)
+    em1 = HeartbeatEmitter(1, dep.monitor.addr, PERIOD).start()
+
+    data = ShardedPipeline(cfg, 16, 4, dp_width=4)
+    state = init_state(cfg, KEY)
+    template = jax.eval_shape(lambda: init_state(cfg, KEY))
+
+    fired = {{"done": False}}
+    def on_metrics(s, rec):
+        if s == 2 and not fired["done"]:
+            fired["done"] = True
+            em1.pause()
+            dep.emitter.pause()           # host 0's own beats stop too
+            time.sleep(8 * PERIOD)
+
+    try:
+        run_elastic(dep, make_step_for(STEPS), state, data, STEPS,
+                    host_devices=hosts, model_axis=2, like=template,
+                    shardings_fn=shardings_for, on_metrics=on_metrics)
+        raise SystemExit("expected NoSurvivorsError")
+    except NoSurvivorsError as e:
+        print("no survivors OK:", e)
+    em1.stop(); dep.stop()
+    """, devices=8)

@@ -24,6 +24,7 @@ def _run(script: str, devices: int = 8, timeout: int = 600):
     return p.stdout
 
 
+@pytest.mark.slow
 def test_elastic_reshard_restore(tmp_path):
     """Train on a (2,2) mesh, checkpoint, 'lose' 4 devices, restore onto a
     (1,2) survivor mesh and keep training — trajectory must match a run
@@ -97,6 +98,7 @@ def test_elastic_reshard_restore(tmp_path):
     """, devices=8)
 
 
+@pytest.mark.slow
 def test_restore_onto_different_shard_layout(tmp_path):
     """Save shards on a (4,2) mesh, restore bit-exact onto a (2,1) mesh
     with different partition axes AND onto plain numpy — spans reassembly,
@@ -149,6 +151,7 @@ def test_restore_onto_different_shard_layout(tmp_path):
     """, devices=8)
 
 
+@pytest.mark.slow
 def test_sharded_training_matches_single_device(tmp_path):
     """(2 data, 2 model) training == single-device training (same seeds)."""
     _run("""
@@ -189,6 +192,7 @@ def test_sharded_training_matches_single_device(tmp_path):
     """, devices=4)
 
 
+@pytest.mark.slow
 def test_dryrun_single_cell_compiles():
     """End-to-end proof on the real 512-device production mesh (slow)."""
     _run("""
@@ -204,3 +208,54 @@ def test_largest_grid():
     assert largest_grid(8, 2) == (4, 2)
     assert largest_grid(6, 4) == (2, 3)   # model shrinks to a divisor
     assert largest_grid(5, 2) == (5, 1)
+
+
+def test_largest_grid_no_survivors_is_a_clear_error():
+    from repro.core import NoSurvivorsError, largest_grid
+    with pytest.raises(NoSurvivorsError):
+        largest_grid(0, 2)                # used to be ZeroDivisionError
+    with pytest.raises(NoSurvivorsError):
+        largest_grid(-1, 1)
+
+
+def test_survivor_mesh_fraction_and_empty():
+    """A float failed fraction excludes round(f * n) devices (0.5 really
+    halves the fleet) and losing everything raises NoSurvivorsError."""
+    _run("""
+    import jax, pytest
+    from repro.core import NoSurvivorsError, survivor_mesh
+
+    n = len(jax.devices())
+    assert n == 8
+    m = survivor_mesh(0.5, model_axis=2)          # half the devices fail
+    assert m.devices.size == 4, m.devices.shape
+    m = survivor_mesh(0.25, model_axis=2)
+    assert m.devices.size == 6                    # 8 - round(2)
+    m = survivor_mesh(2, model_axis=2)            # int: a device count
+    assert m.devices.size == 6
+    try:
+        survivor_mesh(8, model_axis=2)            # all failed
+        raise SystemExit("expected NoSurvivorsError")
+    except NoSurvivorsError:
+        pass
+    try:
+        survivor_mesh([], model_axis=2)           # empty explicit list
+        raise SystemExit("expected NoSurvivorsError")
+    except NoSurvivorsError:
+        pass
+    print("survivor_mesh fraction OK")
+    """, devices=8)
+
+
+def test_rescale_global_batch_keeps_per_replica_constant():
+    from repro.core import rescale_global_batch
+    # shrink: 8 DP -> 6 DP, per-replica 4 stays constant
+    assert rescale_global_batch(32, 8, 6) == 24
+    # grow: 6 DP -> 8 DP
+    assert rescale_global_batch(24, 6, 8) == 32
+    # round trip is lossless (the old code rounded the global batch down)
+    assert rescale_global_batch(rescale_global_batch(32, 8, 6), 6, 8) == 32
+    with pytest.raises(ValueError):
+        rescale_global_batch(30, 8, 6)    # 30 doesn't divide over 8
+    with pytest.raises(ValueError):
+        rescale_global_batch(32, 8, 0)

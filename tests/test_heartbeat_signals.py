@@ -28,10 +28,16 @@ def test_nonzero_host_emits_to_configured_monitor(tmp_path):
         signal_detection=False), host_id=1, num_hosts=2)
     dep.start()
     assert dep.monitor is None and dep.emitter is not None
+    # last_seen is pre-seeded at start() (into the future, by the startup
+    # grace); wait for a REAL beat to overwrite the seed
+    seeded = mon.last_seen[1]
     deadline = time.time() + 3
-    while 1 not in mon.last_seen and time.time() < deadline:
+    while mon.last_seen[1] == seeded and time.time() < deadline:
         time.sleep(0.02)
-    assert 1 in mon.last_seen
+    assert mon.last_seen[1] != seeded     # a datagram actually arrived
+    # host 0 intentionally has no emitter here, so only assert on host 1
+    # (host 0 will trip its seeded timeout eventually — that's correct)
+    assert 1 not in mon.failed_hosts()
     dep.stop()
     mon.stop()
 
@@ -72,6 +78,54 @@ def test_heartbeat_rejoin_clears_failure():
         time.sleep(0.02)
     assert not mon.any_failure()
     em.stop()
+    mon.stop()
+
+
+def test_silent_from_birth_host_is_declared_failed():
+    """A host that NEVER sends a beat must still trip the timeout: start()
+    seeds last_seen for all num_hosts (it used to only be populated on
+    receipt, so a dead-on-arrival host was never declared failed)."""
+    failures = []
+    mon = HeartbeatMonitor(num_hosts=2, period=0.03, timeout_factor=4.0,
+                           on_failure=failures.append).start()
+    em0 = HeartbeatEmitter(0, mon.addr, 0.03).start()   # host 1: no emitter
+    deadline = time.time() + 3
+    while not mon.any_failure() and time.time() < deadline:
+        time.sleep(0.02)
+    assert mon.failed_hosts() == [1]
+    assert failures == [1]
+    assert 0 in mon.alive_hosts()
+    em0.stop()
+    mon.stop()
+
+
+def test_acknowledge_excludes_until_rejoin():
+    """acknowledge() stops counting a handled failure; the host rejoining
+    (beating again) fires on_rejoin and resumes monitoring."""
+    failures, rejoins = [], []
+    mon = HeartbeatMonitor(num_hosts=2, period=0.03, timeout_factor=4.0,
+                           on_failure=failures.append,
+                           on_rejoin=rejoins.append).start()
+    ems = [HeartbeatEmitter(i, mon.addr, 0.03).start() for i in range(2)]
+    time.sleep(0.2)
+    ems[1].pause()
+    deadline = time.time() + 3
+    while not mon.any_failure() and time.time() < deadline:
+        time.sleep(0.02)
+    assert failures == [1]
+    mon.acknowledge(1)                    # recovery layer handled it
+    assert not mon.any_failure()
+    assert mon.alive_hosts() == [0]       # excluded host is not alive
+    time.sleep(0.3)                       # excluded: must NOT re-fail
+    assert failures == [1] and not mon.any_failure()
+    ems[1].resume()
+    deadline = time.time() + 3
+    while not rejoins and time.time() < deadline:
+        time.sleep(0.02)
+    assert rejoins == [1]
+    assert 1 in mon.alive_hosts()         # monitored again after rejoin
+    for e in ems:
+        e.stop()
     mon.stop()
 
 
