@@ -1,0 +1,116 @@
+"""Serving-engine benchmark: throughput, latency percentiles, failover.
+
+Three numbers matter (docs/serving.md):
+  - continuous-batching throughput: decode tok/s and prefill tok/s through
+    the engine (vs the request-at-a-time floor the slot pool replaces);
+  - request latency: p50/p99 time-to-first-token and total latency over a
+    request sweep (CPU timings are shape, not TPU performance — same
+    caveat as bench_kernels);
+  - failover recovery time: with 2 replicas and one killed mid-decode via
+    ``FaultInjector.schedule_replica_kill``, the gap between the kill and
+    the first retried request's first token on the survivor.
+
+Emits machine-readable ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from typing import Dict, List
+
+import jax
+
+
+def write_json(results: Dict[str, float],
+               path: str = "BENCH_serve.json") -> str:
+    path = os.environ.get("BENCH_SERVE_JSON", path)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    return path
+
+
+def main() -> List[str]:
+    from repro.core import FaultInjector
+    from repro.models import get_config, init_params
+    from repro.serve import ServeEngine, pctl
+
+    rows: List[str] = []
+    results: Dict[str, float] = {}
+    cfg = get_config("granite-3-8b", tiny=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt_len, gen, n_req = 16, 16, 8
+    prompts = [[int(t) for t in jax.random.randint(
+        jax.random.PRNGKey(100 + i), (prompt_len,), 0, cfg.vocab_size)]
+        for i in range(n_req)]
+
+    # ---- throughput + latency: 1 replica, continuous batching ----
+    eng = ServeEngine(cfg, params, num_replicas=1, slots_per_replica=4,
+                      max_len=prompt_len + gen, fault_tolerant=False)
+    # warm the compiles outside the timed window
+    warm = eng.submit(prompts[0], 2)
+    eng.run()
+    assert warm in eng.results()
+    for p in prompts:
+        eng.submit(p, gen)
+    t0 = time.perf_counter()
+    res = eng.run()
+    wall = time.perf_counter() - t0
+    lat = eng.request_latencies()[1:]            # drop the warmup request
+    eng.shutdown()
+    dec_tokens = sum(len(v) for v in res.values()) - 2  # minus warmup
+    tok_s = dec_tokens / wall
+    ttft = [t for _, t, _ in lat]
+    total = [t for _, _, t in lat]
+    p50, p99 = statistics.median(total), pctl(total, 0.99)
+    print(f"continuous batching ({cfg.name} tiny, {n_req} req x "
+          f"{prompt_len}+{gen} tok, 4 slots): {tok_s:.0f} tok/s decode, "
+          f"prefill {n_req * prompt_len / wall:.0f} tok/s amortized")
+    print(f"latency: ttft p50={statistics.median(ttft) * 1e3:.0f}ms  "
+          f"total p50={p50 * 1e3:.0f}ms p99={p99 * 1e3:.0f}ms")
+    rows.append(f"serve_decode_tok_s,{tok_s:.1f},")
+    rows.append(f"serve_latency_p50_ms,{p50 * 1e3:.1f},"
+                f"p99_ms={p99 * 1e3:.1f}")
+    results["decode_tok_s"] = tok_s
+    results["prefill_tok_s"] = n_req * prompt_len / wall
+    results["latency_p50_ms"] = p50 * 1e3
+    results["latency_p99_ms"] = p99 * 1e3
+    results["ttft_p50_ms"] = statistics.median(ttft) * 1e3
+
+    # ---- failover: kill 1 of 2 replicas mid-decode ----
+    inj = FaultInjector().schedule_replica_kill(4, replica_id=1)
+    eng = ServeEngine(cfg, params, num_replicas=2, slots_per_replica=2,
+                      max_len=prompt_len + gen, fault_tolerant=True,
+                      heartbeat_period=0.05, heartbeat_timeout_factor=40.0,
+                      fault_injector=inj)
+    for p in prompts:
+        eng.submit(p, gen)
+    res = eng.run()
+    fail_t = next(e["t"] for e in eng.events
+                  if e["event"] == "replica_failed")
+    retried = set(eng.scheduler.retried_rids)
+    assert retried and not eng.scheduler.failed_rids
+    # recovery = kill -> first retried request streaming again
+    first_retry_tok = min(eng.scheduler.requests[r].t_first_token
+                          for r in retried)
+    recovery_s = first_retry_tok - fail_t
+    eng.shutdown()
+    print(f"failover: killed 1/2 replicas, {len(retried)} requests "
+          f"re-executed, 0 dropped; recovery to first retried token "
+          f"{recovery_s * 1e3:.0f}ms")
+    rows.append(f"serve_failover_recovery_ms,{recovery_s * 1e3:.1f},"
+                f"retried={len(retried)}")
+    results["failover_recovery_ms"] = recovery_s * 1e3
+    results["failover_retried"] = float(len(retried))
+    results["failover_dropped"] = 0.0
+
+    path = write_json(results)
+    print(f"(machine-readable: {path})")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

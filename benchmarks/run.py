@@ -12,7 +12,8 @@ import traceback
 def main() -> None:
     sections = []
     from benchmarks import (bench_checkpoint, bench_heartbeat, bench_kernels,
-                            bench_overhead_fwi, bench_sdc, bench_throughput)
+                            bench_overhead_fwi, bench_sdc, bench_serve,
+                            bench_throughput)
     suites = [
         ("overhead_fwi (paper Fig.1-2, eq.2-3)", bench_overhead_fwi.main),
         ("checkpoint cost + Young/Daly (eq.1)", bench_checkpoint.main),
@@ -20,6 +21,7 @@ def main() -> None:
         ("kernels vs oracles", bench_kernels.main),
         ("SDC guard overhead (docs/sdc.md)", bench_sdc.main),
         ("train-loop throughput", bench_throughput.main),
+        ("serving engine (docs/serving.md)", bench_serve.main),
     ]
     all_rows = []
     failed = 0
@@ -35,7 +37,8 @@ def main() -> None:
     for r in all_rows:
         print(r)
     for env, default in (("BENCH_CHECKPOINT_JSON", "BENCH_checkpoint.json"),
-                         ("BENCH_SDC_JSON", "BENCH_sdc.json")):
+                         ("BENCH_SDC_JSON", "BENCH_sdc.json"),
+                         ("BENCH_SERVE_JSON", "BENCH_serve.json")):
         json_path = os.environ.get(env, default)
         if os.path.exists(json_path):  # written by the owning bench module
             print(f"(machine-readable results: {json_path})")

@@ -12,6 +12,9 @@ cd "$(dirname "$0")/.."
 test -f tests/test_sdc.py
 # the elastic failover suite likewise (tests/test_elastic_loop.py)
 test -f tests/test_elastic_loop.py
+# and the serving-engine suite (tests/test_serve.py; its multi-replica E2E
+# cases carry the `slow` marker, so --fast skips them)
+test -f tests/test_serve.py
 ARGS=()
 for a in "$@"; do
   if [ "$a" = "--fast" ]; then

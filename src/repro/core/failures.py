@@ -14,6 +14,12 @@ treats it like a failure whose cure is rollback rather than restart.
 ``StragglerWatchdog`` addresses slow-node ("fail-stutter") behaviour: it
 tracks step durations and flags steps slower than ``factor`` x the running
 median so the elastic layer can treat persistent stragglers as failures.
+
+The replica-scoped injectors (``schedule_replica_kill``,
+``schedule_latency_spike`` / ``check_replica``) are the serving-engine
+counterparts (docs/serving.md): they drive failover and tail-latency
+scenarios in the serving tests and benchmarks with the same tooling the
+training E2E tests use.
 """
 from __future__ import annotations
 
@@ -68,8 +74,12 @@ class FaultInjector:
         self._fail_at: Dict[int, int] = {}     # step -> host
         self._slow_at: Dict[int, float] = {}   # step -> extra seconds
         self._flip_at: Dict[int, List[Tuple[str, int]]] = {}  # step -> flips
+        # replica-scoped (serving, docs/serving.md): engine step -> replica
+        self._kill_replica_at: Dict[int, int] = {}
+        self._spike_at: Dict[int, Tuple[Optional[int], float]] = {}
         self.triggered: List[int] = []
         self.sdc_injected: List[Tuple[int, str, int]] = []
+        self.replica_kills: List[Tuple[int, int]] = []   # (step, replica)
 
     def schedule_failstop(self, step: int, host_id: int = 0):
         self._fail_at[step] = host_id
@@ -85,6 +95,40 @@ class FaultInjector:
         superstep ``step`` executes.  Deterministic SDC for tests."""
         self._flip_at.setdefault(step, []).append((leaf, bit))
         return self
+
+    def schedule_replica_kill(self, step: int, replica_id: int = 0):
+        """Kill serving replica ``replica_id`` at engine step ``step``:
+        ``check_replica`` raises ``SimulatedFailure(kind="replica-kill")``
+        the first time that replica is dispatched to at or past the step.
+        The serving engine treats it exactly like a heartbeat-detected
+        death — drain, retry on survivors (docs/serving.md)."""
+        self._kill_replica_at[step] = replica_id
+        return self
+
+    def schedule_latency_spike(self, step: int, extra_seconds: float,
+                               replica_id: Optional[int] = None):
+        """Inject a latency spike at engine step ``step``: the dispatched
+        replica (or only ``replica_id`` when given) sleeps
+        ``extra_seconds`` before its work — the serving fail-stutter
+        counterpart of ``schedule_straggle``, drivable from latency
+        benchmarks (p99) and straggler tests."""
+        self._spike_at[step] = (replica_id, extra_seconds)
+        return self
+
+    def check_replica(self, step: int, replica_id: int):
+        """Call before dispatching work to a replica at an engine step."""
+        if step in self._spike_at:
+            target, extra = self._spike_at[step]
+            if target is None or target == replica_id:
+                del self._spike_at[step]
+                time.sleep(extra)
+        for at in sorted(self._kill_replica_at):
+            # ">= at": the victim may not be dispatched at the exact step
+            # (empty pool, already draining) — the kill must still land
+            if step >= at and self._kill_replica_at[at] == replica_id:
+                del self._kill_replica_at[at]
+                self.replica_kills.append((step, replica_id))
+                raise SimulatedFailure(step, replica_id, kind="replica-kill")
 
     def check(self, step: int):
         """Call at each BSP step boundary."""

@@ -118,6 +118,27 @@ class HeartbeatMonitor:
         t2.start()
         return self
 
+    def watch(self, host: int) -> None:
+        """Begin monitoring an identity added after start() — e.g. a warm
+        standby serving replica activated into the pool (replica-scoped
+        registration, docs/serving.md).  Seeded with the same startup
+        grace as the initial hosts: activation skew is not death."""
+        with self._lock:
+            self.excluded.discard(host)
+            self.failed.pop(host, None)
+            self.last_seen.setdefault(host,
+                                      time.time() + self.startup_grace)
+
+    def unwatch(self, host: int) -> None:
+        """Stop monitoring an identity that was decommissioned on purpose
+        (replica scaled away) — unlike ``acknowledge`` it forgets the
+        (inc, seq) history too, so a fresh replica may reuse the id."""
+        with self._lock:
+            self.failed.pop(host, None)
+            self.last_seen.pop(host, None)
+            self.excluded.discard(host)
+            self._last_beat.pop(host, None)
+
     def acknowledge(self, host: int) -> None:
         """The recovery layer handled this failure: stop counting the host
         as failed and stop monitoring it until it beats again (rejoin)."""

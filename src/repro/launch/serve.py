@@ -1,81 +1,118 @@
-"""Serving driver: batched prefill + greedy decode with a KV cache.
+"""Serving driver: the dependable serving engine (docs/serving.md).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --tiny \
-        --batch 4 --prompt-len 32 --gen 32
+Thin CLI over ``repro.serve.ServeEngine`` — continuous batching over a
+slot cache pool, N replicas with heartbeat failover, decode-path SDC
+sentinel.  The old fixed-batch demo is what examples/serve_lm.py still
+shows; this driver serves a request stream.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --tiny \
+        --requests 8 --prompt-len 32 --gen 32 \
+        --replicas 2 --slots 4 --fault-tolerant --kill-replica-at 5
 """
 from __future__ import annotations
 
 import argparse
+import statistics
 import sys
+import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ALL_ARCHS
-from repro.launch.mesh import make_host_mesh
-from repro.models import get_config, init_cache, init_params
-from repro.sharding.api import mesh_context
-from repro.train import make_decode_step, make_prefill_step
+from repro.core import CheckpointManager, FaultInjector
+from repro.models import get_config, init_params
+from repro.serve import ServeEngine, make_standby_source, pctl
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b", choices=ALL_ARCHS)
     ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--data-par", type=int, default=1)
-    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="model replicas in the serving pool")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV-cache slots per replica (max in-flight "
+                    "requests each)")
+    ap.add_argument("--fault-tolerant", action="store_true",
+                    help="heartbeat monitoring + decode sentinel + "
+                    "failover (re-execute drained requests on survivors)")
+    ap.add_argument("--standbys", type=int, default=0,
+                    help="warm standbys restored from a params checkpoint "
+                    "on failure (implies --fault-tolerant)")
+    ap.add_argument("--kill-replica-at", type=int, default=-1,
+                    help="inject a replica kill at this engine step "
+                    "(drives the failover path end to end)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, tiny=args.tiny)
     if not cfg.has_decode:
         print(f"{args.arch} is encoder-only; no decode loop")
         return 1
-    mesh = make_host_mesh(args.data_par, args.model_par)
-    with mesh_context(mesh):
-        params = init_params(cfg, jax.random.PRNGKey(0))
-        cache = init_cache(cfg, args.batch, args.prompt_len + args.gen)
-        prefill = jax.jit(make_prefill_step(cfg))
-        decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+    if cfg.embedding_inputs:
+        print(f"{args.arch} takes embedding inputs; the engine serves "
+              "token prompts")
+        return 1
 
-        def make_batch(toks):
-            b = {"tokens": toks}
-            if cfg.mrope_sections:
-                S = toks.shape[1]
-                pos = jnp.broadcast_to(
-                    jnp.arange(S, dtype=jnp.int32)[None, None],
-                    (3, toks.shape[0], S))
-                b["positions"] = pos
-            if cfg.embedding_inputs:
-                b = {"embeddings": jax.random.normal(
-                    jax.random.PRNGKey(2),
-                    (toks.shape[0], toks.shape[1], cfg.d_model), cfg.dtype)}
-                if cfg.mrope_sections:
-                    b["positions"] = pos
-            return b
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    injector = None
+    if args.kill_replica_at >= 0:
+        injector = FaultInjector().schedule_replica_kill(
+            args.kill_replica_at, replica_id=args.replicas - 1)
+    fault_tolerant = args.fault_tolerant or args.standbys > 0
 
-        prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                     (args.batch, args.prompt_len), 0,
-                                     cfg.vocab_size)
-        t0 = time.perf_counter()
-        tok, cache = prefill(params, make_batch(prompts), cache)
-        jax.block_until_ready(tok)
-        t_pre = time.perf_counter() - t0
+    engine = ServeEngine(cfg, params, num_replicas=args.replicas,
+                         slots_per_replica=args.slots,
+                         max_len=args.prompt_len + args.gen,
+                         fault_tolerant=fault_tolerant,
+                         fault_injector=injector)
+    ckpt_dir = None
+    if args.standbys > 0:
+        # warm-standby params come back through restore_latest — the same
+        # walk-back-past-corruption path training recovery uses
+        ckpt_dir = tempfile.mkdtemp(prefix="serve_standby_")
+        manager = CheckpointManager(ckpt_dir, fsync="none")
+        manager.save(0, {"params": params})
+        like = jax.eval_shape(lambda: params)
+        for _ in range(args.standbys):
+            engine.add_standby(make_standby_source(manager, like))
 
-        t0 = time.perf_counter()
-        for i in range(args.gen - 1):
-            tok, cache = decode(params, make_batch(tok[:, None]), cache)
-        jax.block_until_ready(tok)
-        t_dec = time.perf_counter() - t0
+    for i in range(args.requests):
+        prompt = jax.random.randint(jax.random.PRNGKey(100 + i),
+                                    (args.prompt_len,), 0, cfg.vocab_size)
+        engine.submit([int(t) for t in prompt], args.gen)
 
-    print(f"prefill {args.batch}x{args.prompt_len}: {t_pre*1e3:.1f} ms "
-          f"({args.batch*args.prompt_len/t_pre:.0f} tok/s)")
-    print(f"decode  {args.batch}x{args.gen-1}: {t_dec*1e3:.1f} ms "
-          f"({args.batch*(args.gen-1)/t_dec:.0f} tok/s)")
-    return 0
+    t0 = time.perf_counter()
+    results = engine.run()
+    wall = time.perf_counter() - t0
+
+    lat = engine.request_latencies()
+    ttft = sorted(t for _, t, _ in lat)
+    total = sorted(t for _, _, t in lat)
+    done_tokens = sum(len(v) for v in results.values())
+    prefill_tokens = args.prompt_len * len(lat)
+    print(f"served {len(results)}/{args.requests} requests "
+          f"({done_tokens} tokens) in {wall:.2f}s on {args.replicas} "
+          f"replica(s) x {args.slots} slots "
+          f"-> {done_tokens / wall:.0f} tok/s decode, "
+          f"{prefill_tokens / wall:.0f} tok/s prefill-amortized")
+    if total:
+        print(f"latency  p50={statistics.median(total) * 1e3:.0f}ms "
+              f"p99={pctl(total, 0.99) * 1e3:.0f}ms "
+              f"ttft p50={statistics.median(ttft) * 1e3:.0f}ms")
+    for ev in engine.events:
+        print(f"event step={ev['step']}: {ev['event']} "
+              + " ".join(f"{k}={v}" for k, v in ev.items()
+                         if k not in ("t", "step", "event")))
+    retried = len(engine.scheduler.retried_rids)
+    if retried:
+        print(f"failover: {retried} request(s) drained and re-executed, "
+              f"{len(engine.scheduler.failed_rids)} dropped")
+    engine.shutdown()
+    return 0 if len(results) == args.requests else 1
 
 
 if __name__ == "__main__":

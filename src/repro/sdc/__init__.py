@@ -3,7 +3,9 @@
 Three tiers, cheapest-coverage to strongest-localization:
   tier 1  ABFT checksummed matmul   repro/kernels/abft_matmul (impl="abft")
   tier 2  StateScrubber             rotating checksum scrub over the state
-  tier 3  LossSentinel              non-finite / loss-spike guard
+  tier 3  LossSentinel              non-finite / loss-spike guard (training)
+          DecodeSentinel            non-finite / entropy-spike logit guard
+                                    (serving decode path, docs/serving.md)
 
 Detection raises ``repro.core.failures.CorruptionDetected``; the recovery
 path in core/coordinator.run_with_recovery rolls back to the last
@@ -11,8 +13,9 @@ checksum-verified checkpoint.  ABFT single-element hits are corrected in
 place and never surface.
 """
 from repro.sdc.checksum import checksums, leaf_checksum, named_leaves
+from repro.sdc.decode_sentinel import DecodeSentinel
 from repro.sdc.scrubber import StateScrubber
 from repro.sdc.sentinel import LossSentinel
 
-__all__ = ["StateScrubber", "LossSentinel", "checksums", "leaf_checksum",
-           "named_leaves"]
+__all__ = ["StateScrubber", "LossSentinel", "DecodeSentinel", "checksums",
+           "leaf_checksum", "named_leaves"]

@@ -1,0 +1,33 @@
+"""repro.serve — the dependable serving engine (docs/serving.md).
+
+Continuous-batching inference with the dependability guarantees training
+already has: a slot-based KV-cache pool so prefill of new requests
+interleaves with decode of in-flight ones, N model replicas registered
+with the heartbeat monitor, and detect-and-recover failover — a dead or
+sentinel-flagged replica's requests drain back to the queue and re-execute
+on survivors with token-identical greedy streams.
+"""
+from repro.serve.cache_pool import CachePool, PoolExhausted
+from repro.serve.engine import ServeEngine, pctl
+from repro.serve.replica import (Replica, ServeFns, make_standby_source,
+                                 restore_standby_params)
+from repro.serve.router import NoHealthyReplicasError, ReplicaRouter
+from repro.serve.scheduler import (DECODE, DONE, FAILED, PREFILL, QUEUED,
+                                   QueueFull, Request, Scheduler)
+
+__all__ = [
+    "ServeEngine",
+    "pctl",
+    "Scheduler",
+    "Request",
+    "QueueFull",
+    "CachePool",
+    "PoolExhausted",
+    "Replica",
+    "ServeFns",
+    "ReplicaRouter",
+    "NoHealthyReplicasError",
+    "make_standby_source",
+    "restore_standby_params",
+    "QUEUED", "PREFILL", "DECODE", "DONE", "FAILED",
+]

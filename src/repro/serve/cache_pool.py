@@ -1,0 +1,103 @@
+"""Slot-based KV-cache pool: one device cache row per in-flight request.
+
+The model's ``init_cache`` builds a lockstep batch cache — one shared
+position index for every row — which cannot express continuous batching
+(each in-flight request sits at a different decode position).  The pool
+instead stacks ``num_slots`` independent B=1 cache rows along a new
+leading axis; the engine vmaps the decode step over that axis, so every
+row carries its own ``index``/``pos`` and advances at its own rate.
+
+Slot lifecycle: ``acquire`` hands a free slot to a request at prefill
+admission; the prefill runs against a FRESH B=1 cache and ``write_row``
+scatters the filled row into the pool, which also wipes whatever a
+previous occupant left there (stale ``pos`` entries from a longer earlier
+request would otherwise be attended once the new request's position
+passes them — decode_mha masks on ``pos <= cur`` only); ``release``
+recycles the slot when the request completes or drains.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import init_cache
+
+
+class PoolExhausted(RuntimeError):
+    """No free slot — admission control should have prevented this."""
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_row(pool, row, slot):
+    # module-level so the compile is shared by every pool of the same
+    # shape (all replicas of one engine, and a warm standby's pool); the
+    # pool is donated — a slot write must not copy the whole pool
+    return jax.tree.map(
+        lambda p, r: lax.dynamic_update_slice_in_dim(p, r[None], slot, 0),
+        pool, row)
+
+
+class CachePool:
+    def __init__(self, cfg, num_slots: int, max_len: int):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        row = init_cache(cfg, 1, max_len)
+        # stack num_slots zero rows: (num_slots,) + row-leaf shape
+        self.cache = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (num_slots,) + x.shape), row)
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._owner: Dict[int, int] = {}       # slot -> rid
+
+    # ------------------------------------------------------------------
+    # slot accounting
+    # ------------------------------------------------------------------
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self._owner)
+
+    def owner(self, slot: int) -> Optional[int]:
+        return self._owner.get(slot)
+
+    def acquire(self, rid: int) -> int:
+        if not self._free:
+            raise PoolExhausted(
+                f"all {self.num_slots} slots in use; admission control "
+                "must gate on free_count")
+        slot = self._free.pop()
+        self._owner[slot] = rid
+        return slot
+
+    def release(self, slot: int) -> None:
+        if slot not in self._owner:
+            raise ValueError(f"slot {slot} not assigned")
+        del self._owner[slot]
+        self._free.append(slot)
+
+    def release_all(self) -> List[int]:
+        """Drain every slot (replica died); returns the rids that were in
+        flight, in slot order (the engine requeues them in reverse so the
+        queue front ends up back in slot order)."""
+        rids = [self._owner[s] for s in sorted(self._owner)]
+        self._owner.clear()
+        self._free = list(range(self.num_slots - 1, -1, -1))
+        return rids
+
+    # ------------------------------------------------------------------
+    # device cache
+    # ------------------------------------------------------------------
+    def write_row(self, slot: int, row_cache: Any) -> None:
+        """Scatter a filled B=1 cache (prefill output) into ``slot`` —
+        fully overwrites the row, so slot recycling can never leak a
+        previous request's cache entries."""
+        self.cache = _scatter_row(self.cache, row_cache, jnp.int32(slot))

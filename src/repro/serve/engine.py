@@ -1,0 +1,266 @@
+"""The dependable serving engine: continuous batching + replicated failover.
+
+One ``ServeEngine`` owns a request ``Scheduler``, a ``ReplicaRouter`` over
+N model replicas (each a params copy + slot ``CachePool``), and — when
+``fault_tolerant`` — a ``HeartbeatMonitor`` the replicas beat into.  Each
+engine step, per healthy replica:
+
+1. **admit**: pop queued requests while the replica has free slots (up to
+   ``max_prefill_per_step``), run B=1 prefill for each, scatter the filled
+   cache row into its slot — prefill of new requests interleaves with
+   decode of in-flight ones;
+2. **decode**: one vmapped decode step over the whole pool (fixed shape,
+   one compile); every active slot's request gains one greedy token;
+3. **guard**: the ``DecodeSentinel`` watches the step's logit stats —
+   non-finite logits or an entropy spike flags the REPLICA as corrupt.
+
+Failures — heartbeat-detected (drained at the next step boundary),
+injected (``FaultInjector.schedule_replica_kill``), or sentinel-flagged —
+all take the same path: the router excludes the replica, its in-flight
+requests drain back to the queue with partial output discarded, and
+survivors re-execute them.  Greedy decode is a pure function of the
+prompt, so the retried streams are token-identical to an uninterrupted
+run and the engine drops zero requests (tests/test_serve.py asserts
+both).  Warm standbys (params via ``CheckpointManager.restore_latest``)
+are activated one per failure to restore capacity.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.failures import CorruptionDetected, SimulatedFailure
+from repro.core.heartbeat import HeartbeatMonitor
+from repro.sdc import DecodeSentinel
+from repro.serve.replica import Replica, ServeFns
+from repro.serve.router import NoHealthyReplicasError, ReplicaRouter
+from repro.serve.scheduler import DECODE, Scheduler
+
+
+def pctl(xs, q: float) -> float:
+    """Nearest-rank percentile over a non-empty sample — one quantile
+    convention for the driver and the benchmark."""
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, num_replicas: int = 1,
+                 slots_per_replica: int = 4, max_len: int = 256,
+                 fault_tolerant: bool = False,
+                 heartbeat_period: float = 0.05,
+                 heartbeat_timeout_factor: float = 5.0,
+                 sentinel: bool = True,
+                 sentinel_spike_factor: float = 4.0,
+                 max_pending: int = 256,
+                 max_prefill_per_step: int = 2,
+                 max_retries: int = 3,
+                 fault_injector=None,
+                 impl: Optional[str] = None):
+        if not cfg.has_decode:
+            raise ValueError(f"{cfg.name} is encoder-only; cannot serve "
+                             "autoregressive decode")
+        if cfg.embedding_inputs:
+            raise ValueError(f"{cfg.name} takes embedding inputs; the "
+                             "engine serves token prompts")
+        self.cfg = cfg
+        self.fns = ServeFns(cfg, slots_per_replica, max_len, impl=impl)
+        self.scheduler = Scheduler(max_pending=max_pending,
+                                   max_retries=max_retries)
+        self.injector = fault_injector
+        self.max_prefill_per_step = max_prefill_per_step
+        self.monitor: Optional[HeartbeatMonitor] = None
+        if fault_tolerant:
+            self.monitor = HeartbeatMonitor(
+                num_replicas, period=heartbeat_period,
+                timeout_factor=heartbeat_timeout_factor).start()
+        sentinel_factory = None
+        if sentinel:
+            # hard ceiling just under uniform: a replica corrupt from the
+            # first step (bad standby restore) trips even during warmup
+            ceiling = 0.98 * math.log(cfg.padded_vocab)
+            sentinel_factory = lambda: DecodeSentinel(  # noqa: E731
+                spike_factor=sentinel_spike_factor,
+                abs_max_entropy=ceiling)
+        self.router = ReplicaRouter(self.fns, self.monitor,
+                                    heartbeat_period=heartbeat_period,
+                                    sentinel_factory=sentinel_factory)
+        for _ in range(num_replicas):
+            self.router.add_replica(params)
+        self.engine_step = 0
+        self.events: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------------------
+    # client surface
+    # ------------------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int) -> int:
+        """Admit one request (raises ``scheduler.QueueFull`` past
+        ``max_pending``); returns the request id."""
+        # enforce the cache bound AT ADMISSION: past it, decode's rolling
+        # cache write wraps (slot = cur % sc) and silently overwrites the
+        # prompt's earliest KV entries — wrong tokens, and a broken
+        # determinism guarantee for failover retries
+        need = len(prompt) + max_new_tokens - 1
+        if need > self.fns.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens "
+                f"({max_new_tokens}) needs {need} cache positions > "
+                f"max_len {self.fns.max_len}")
+        req = self.scheduler.submit(prompt, max_new_tokens,
+                                    t_submit=time.perf_counter())
+        return req.rid
+
+    def add_standby(self, source) -> None:
+        self.router.add_standby(source)
+
+    def results(self) -> Dict[int, List[int]]:
+        return self.scheduler.results()
+
+    def request_latencies(self) -> List[Tuple[int, float, float]]:
+        """[(rid, time-to-first-token, total latency), ...] for DONE
+        requests.  A retried request's TTFT is measured to its RETRY's
+        first token — partial pre-failure output was discarded, so that is
+        when the client-visible stream actually starts."""
+        out = []
+        for r in self.scheduler.requests.values():
+            if r.t_done is not None and r.t_first_token is not None:
+                out.append((r.rid, r.t_first_token - r.t_submit,
+                            r.t_done - r.t_submit))
+        return out
+
+    # ------------------------------------------------------------------
+    # the loop
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One engine iteration over every healthy replica."""
+        self._drain_detected()
+        healthy = sorted(self.router.healthy(), key=lambda r: r.id)
+        if not healthy and not self.scheduler.all_done():
+            rep = self.router.activate_standby()
+            if rep is None:
+                raise NoHealthyReplicasError(
+                    "every replica failed and no warm standby remains; "
+                    f"{len(self.scheduler.in_flight())} requests in "
+                    f"flight, {self.scheduler.pending()} queued")
+            self._record("standby_activated", replica=rep.id)
+            healthy = [rep]
+        for rep in healthy:
+            try:
+                self._step_replica(rep)
+            except SimulatedFailure as e:
+                self._fail(rep, f"injected:{e.kind}")
+            except CorruptionDetected as e:
+                self._fail(rep, f"sentinel:{e.detail}")
+        self.engine_step += 1
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
+        """Drive ``step`` until every request is DONE (or FAILED past its
+        retry budget); returns rid -> greedy tokens."""
+        if max_steps is None:
+            budget = sum(r.max_new_tokens
+                         for r in self.scheduler.requests.values())
+            # every step decodes >= 1 token on some replica unless the
+            # engine is draining a failure; x4 + slack absorbs retries
+            max_steps = 4 * budget + 200
+        start = self.engine_step
+        while not self.scheduler.all_done():
+            if self.engine_step - start > max_steps:
+                raise RuntimeError(
+                    f"no completion after {max_steps} engine steps: "
+                    f"{self.scheduler.pending()} queued, "
+                    f"{len(self.scheduler.in_flight())} in flight")
+            self.step()
+        return self.results()
+
+    def shutdown(self) -> None:
+        self.router.shutdown()
+        if self.monitor is not None:
+            self.monitor.stop()
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+    def _record(self, event: str, **kw) -> None:
+        self.events.append({"t": time.perf_counter(), "step":
+                            self.engine_step, "event": event, **kw})
+
+    def _drain_detected(self) -> None:
+        for rid in self.router.take_detected():
+            rep = self.router.replicas[rid]
+            self._fail(rep, "heartbeat-timeout")
+
+    def _fail(self, rep: Replica, reason: str) -> None:
+        drained = self.router.fail_replica(rep, reason)
+        # requeue in REVERSE slot order: each requeue prepends, so the
+        # reversed walk leaves the queue front in slot (= admission) order
+        for r in reversed(drained):
+            req = self.scheduler.requests[r]
+            self.scheduler.requeue(req)
+            req.t_first_token = None     # the retry restarts the stream
+        self._record("replica_failed", replica=rep.id, reason=reason,
+                     drained=len(drained))
+        if self.router.standby_count:
+            standby = self.router.activate_standby()
+            if standby is not None:
+                self._record("standby_activated", replica=standby.id)
+
+    def _step_replica(self, rep: Replica) -> None:
+        if self.injector is not None:
+            # may raise SimulatedFailure (replica kill) or sleep (latency
+            # spike) — caught by step()
+            self.injector.check_replica(self.engine_step, rep.id)
+        self._admit(rep)
+        self._decode(rep)
+
+    def _admit(self, rep: Replica) -> None:
+        admitted = 0
+        while (rep.pool.free_count > 0 and self.scheduler.pending() > 0
+               and admitted < self.max_prefill_per_step):
+            req = self.scheduler.pop_queued()
+            slot = rep.pool.acquire(req.rid)
+            self.scheduler.start_prefill(req, slot, rep.id)
+            tok0, row = rep.prefill(req.prompt)
+            rep.pool.write_row(slot, row)
+            self.scheduler.start_decode(req, tok0)
+            req.t_first_token = time.perf_counter()
+            admitted += 1
+            if req.remaining == 0:       # max_new_tokens == 1
+                self._finish(rep, req, slot)
+
+    def _decode(self, rep: Replica) -> None:
+        active = rep.pool.active_slots
+        if not active:
+            return
+        last = np.zeros((self.fns.num_slots,), np.int32)
+        for slot in active:
+            req = self.scheduler.requests[rep.pool.owner(slot)]
+            assert req.state == DECODE, (req.rid, req.state)
+            last[slot] = req.last_token
+        toks, stats = rep.decode(last)
+        if rep.sentinel is not None:
+            nonfinite = float(np.max(
+                np.asarray(stats["nonfinite"]).reshape(-1)[active]))
+            entropy = float(np.mean(
+                np.asarray(stats["entropy"]).reshape(-1)[active]))
+            reason = rep.sentinel.observe(self.engine_step, nonfinite,
+                                          entropy)
+            if reason is not None:
+                # the step's tokens are suspect: discard them, fail the
+                # replica (its requests retry on a survivor)
+                raise CorruptionDetected(self.engine_step,
+                                         "decode-sentinel", reason)
+        now = time.perf_counter()
+        for slot in active:
+            req = self.scheduler.requests[rep.pool.owner(slot)]
+            done = self.scheduler.append_token(req, int(toks[slot]))
+            if done:
+                self._finish(rep, req, slot, now=now)
+
+    def _finish(self, rep: Replica, req, slot: int,
+                now: Optional[float] = None) -> None:
+        self.scheduler.finish(req)
+        rep.pool.release(slot)
+        req.t_done = time.perf_counter() if now is None else now

@@ -1,0 +1,126 @@
+"""One model replica: params + slot cache pool + compiled serve steps.
+
+Replication is the serving counterpart of the elastic training loop
+(docs/elastic.md): N replicas hold the same params, each with its own
+``CachePool``, each emitting heartbeats to the shared ``HeartbeatMonitor``
+under its replica id.  The compiled step functions are SHARED across
+replicas of the same (cfg, num_slots, max_len) — a warm standby activates
+without paying a fresh XLA compile (see ``ServeFns``).
+
+The decode step is the vmapped-per-slot serve step
+(``train.serve.make_serve_decode_step``): every pool row advances at its
+own position, which is what lets prefill of new requests interleave with
+decode of in-flight ones (continuous batching).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.heartbeat import HeartbeatEmitter
+from repro.models import init_cache
+from repro.sdc import DecodeSentinel
+from repro.serve.cache_pool import CachePool
+from repro.train import make_prefill_step, make_serve_decode_step
+
+
+class ServeFns:
+    """Compiled prefill/decode shared by every replica of one engine.
+
+    Prefill is B=1 against a fresh cache row (compiled once per distinct
+    prompt length); decode is vmapped over the pool's slot axis with the
+    pool donated (no per-step cache copy — the same fix satellite-applied
+    to examples/serve_lm.py)."""
+
+    def __init__(self, cfg, num_slots: int, max_len: int,
+                 impl: Optional[str] = None):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.prefill = jax.jit(make_prefill_step(cfg, impl))
+        self.decode = jax.jit(
+            jax.vmap(make_serve_decode_step(cfg, impl),
+                     in_axes=(None, 0, 0)),
+            donate_argnums=(2,))
+        # fresh-row template: functional, never mutated — reused by every
+        # prefill so slot recycling starts from a clean cache row
+        self.fresh_row = init_cache(cfg, 1, max_len)
+
+
+class Replica:
+    def __init__(self, replica_id: int, params: Any, fns: ServeFns,
+                 sentinel: Optional[DecodeSentinel] = None):
+        self.id = replica_id
+        self.params = params
+        self.fns = fns
+        self.pool = CachePool(fns.cfg, fns.num_slots, fns.max_len)
+        self.sentinel = sentinel
+        self.emitter: Optional[HeartbeatEmitter] = None
+        self.healthy = True
+        self.fail_reason: Optional[str] = None
+        self.steps = 0                      # decode steps this replica ran
+
+    # ------------------------------------------------------------------
+    # heartbeat
+    # ------------------------------------------------------------------
+    def attach_emitter(self, monitor_addr, period: float) -> None:
+        self.emitter = HeartbeatEmitter(self.id, tuple(monitor_addr),
+                                        period=period).start()
+
+    def shutdown(self) -> None:
+        if self.emitter is not None:
+            self.emitter.stop()
+            self.emitter = None
+
+    # ------------------------------------------------------------------
+    # model steps
+    # ------------------------------------------------------------------
+    def prefill(self, prompt: Sequence[int]) -> Tuple[int, Any]:
+        """Run B=1 prefill for one request; returns (first greedy token,
+        filled cache row) — the caller scatters the row into a pool slot."""
+        toks = jnp.asarray(list(prompt), jnp.int32)[None]
+        if toks.shape[1] > self.fns.max_len:
+            raise ValueError(f"prompt length {toks.shape[1]} exceeds "
+                             f"max_len {self.fns.max_len}")
+        tok, row = self.fns.prefill(self.params, {"tokens": toks},
+                                    self.fns.fresh_row)
+        return int(jax.device_get(tok)[0]), row
+
+    def decode(self, last_tokens) -> Tuple[Any, Dict[str, Any]]:
+        """One decode step over the WHOLE pool (fixed shape, one compile):
+        ``last_tokens`` is (num_slots,) int32 — the previous token per
+        slot, arbitrary for inactive slots (their outputs are ignored).
+        Returns (tokens (num_slots,), stats with per-slot nonfinite and
+        entropy)."""
+        batch = {"tokens": jnp.asarray(last_tokens, jnp.int32)
+                 .reshape(self.fns.num_slots, 1, 1)}
+        toks, self.pool.cache, stats = self.fns.decode(
+            self.params, batch, self.pool.cache)
+        self.steps += 1
+        return (jax.device_get(toks).reshape(-1),
+                jax.device_get(stats))
+
+
+def restore_standby_params(manager, like) -> Tuple[Any, int]:
+    """Warm-standby restore path: pull the newest verifying params
+    checkpoint through ``CheckpointManager.restore_latest`` (walks back
+    past CRC-corrupt checkpoints exactly like training recovery does).
+    ``like``: template pytree of the params.  Returns (params, step)."""
+    state, _local, step, _skipped = manager.restore_latest(
+        like={"params": like})
+    return state["params"], step
+
+
+def make_standby_source(manager, like):
+    """Returns a zero-arg callable the router uses to materialize a warm
+    standby's params on activation."""
+    def source():
+        params, _ = restore_standby_params(manager, like)
+        return params
+    return source
+
+
+__all__ = ["Replica", "ServeFns", "restore_standby_params",
+           "make_standby_source"]

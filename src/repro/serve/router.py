@@ -1,0 +1,131 @@
+"""Replica router: dispatch to healthy replicas, drain the dead ones.
+
+Failure detection reuses the training stack wholesale: every replica runs
+a ``HeartbeatEmitter`` under its replica id against one
+``HeartbeatMonitor`` (``watch``/``unwatch`` register ids added after
+start — warm standbys).  Detection arrives on monitor threads, so the
+router latches it (same pattern as ``core.elastic_loop._HostLatch``) and
+the engine drains the latch at step boundaries.  A replica can also die
+synchronously — an injected ``SimulatedFailure(kind="replica-kill")`` or
+a ``DecodeSentinel`` trip — in which case the router fails it immediately
+and pauses its emitter so the monitor's view agrees.
+
+Failing a replica drains its in-flight requests (``CachePool.release_all``
+in slot order) back to the scheduler queue; greedy decode makes the
+re-execution on a survivor token-identical.  If warm standbys were
+registered, one is activated per failure: params materialized from its
+source (typically ``CheckpointManager.restore_latest`` — see
+``replica.make_standby_source``), a new replica id registered with the
+monitor, compiled fns shared, so capacity recovers without an XLA compile
+or a process relaunch.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.heartbeat import HeartbeatMonitor
+from repro.sdc import DecodeSentinel
+from repro.serve.replica import Replica, ServeFns
+
+
+class NoHealthyReplicasError(RuntimeError):
+    """Every replica is dead and no standby remains — the serving
+    counterpart of ``core.elastic.NoSurvivorsError``."""
+
+
+class ReplicaRouter:
+    def __init__(self, fns: ServeFns,
+                 monitor: Optional[HeartbeatMonitor] = None,
+                 heartbeat_period: float = 0.05,
+                 sentinel_factory: Optional[Callable[[], DecodeSentinel]]
+                 = None):
+        self.fns = fns
+        self.monitor = monitor
+        self.heartbeat_period = heartbeat_period
+        self.sentinel_factory = sentinel_factory
+        self.replicas: Dict[int, Replica] = {}
+        self._standby_sources: List[Callable[[], object]] = []
+        self._next_id = 0
+        self._lock = threading.Lock()
+        self._detected: set = set()      # monitor-thread detections, latched
+        self.events: List[Tuple[str, int, str]] = []   # (kind, id, detail)
+        if monitor is not None:
+            # chain, don't clobber: the embedding application may watch too
+            prev = monitor.on_failure
+            monitor.on_failure = lambda h: (self._latch(h),
+                                            prev(h) if prev else None)
+
+    def _latch(self, replica_id: int) -> None:
+        with self._lock:
+            self._detected.add(replica_id)
+
+    def take_detected(self) -> List[int]:
+        """Replica ids the monitor declared failed since the last drain,
+        plus any currently-failed ids (covers a detection that landed
+        between ``start`` and the first latch wiring)."""
+        with self._lock:
+            got, self._detected = set(self._detected), set()
+        if self.monitor is not None:
+            got |= set(self.monitor.failed_hosts())
+        return sorted(h for h in got
+                      if h in self.replicas and self.replicas[h].healthy)
+
+    # ------------------------------------------------------------------
+    # pool membership
+    # ------------------------------------------------------------------
+    def add_replica(self, params) -> Replica:
+        rid = self._next_id
+        self._next_id += 1
+        sentinel = (self.sentinel_factory() if self.sentinel_factory
+                    else None)
+        rep = Replica(rid, params, self.fns, sentinel=sentinel)
+        self.replicas[rid] = rep
+        if self.monitor is not None:
+            self.monitor.watch(rid)
+            rep.attach_emitter(self.monitor.addr, self.heartbeat_period)
+        return rep
+
+    def add_standby(self, source: Callable[[], object]) -> None:
+        """Register a warm standby: ``source()`` materializes its params
+        at activation time (e.g. ``make_standby_source(manager, like)``)."""
+        self._standby_sources.append(source)
+
+    @property
+    def standby_count(self) -> int:
+        return len(self._standby_sources)
+
+    def healthy(self) -> List[Replica]:
+        return [r for r in self.replicas.values() if r.healthy]
+
+    # ------------------------------------------------------------------
+    # failure handling
+    # ------------------------------------------------------------------
+    def fail_replica(self, rep: Replica, reason: str) -> List[int]:
+        """Take a replica out of service; returns the drained rids (slot
+        order).  Idempotent: a replica already failed drains nothing."""
+        if not rep.healthy:
+            return []
+        rep.healthy = False
+        rep.fail_reason = reason
+        if rep.emitter is not None:
+            rep.emitter.pause()          # monitor view must agree: no beats
+        if self.monitor is not None:
+            self.monitor.acknowledge(rep.id)
+        drained = rep.pool.release_all()
+        self.events.append(("replica_failed", rep.id,
+                            f"{reason};drained={len(drained)}"))
+        return drained
+
+    def activate_standby(self) -> Optional[Replica]:
+        """Bring one warm standby into the pool (None when none remain)."""
+        if not self._standby_sources:
+            return None
+        source = self._standby_sources.pop(0)
+        rep = self.add_replica(source())
+        self.events.append(("standby_activated", rep.id, ""))
+        return rep
+
+    def shutdown(self) -> None:
+        for rep in self.replicas.values():
+            rep.shutdown()

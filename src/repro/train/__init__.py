@@ -1,6 +1,7 @@
 from repro.train.state import TrainState, init_state
 from repro.train.step import make_train_step, loss_fn
-from repro.train.serve import make_prefill_step, make_decode_step
+from repro.train.serve import (make_prefill_step, make_decode_step,
+                               make_serve_decode_step, logit_stats)
 
 __all__ = [
     "TrainState",
@@ -9,4 +10,6 @@ __all__ = [
     "loss_fn",
     "make_prefill_step",
     "make_decode_step",
+    "make_serve_decode_step",
+    "logit_stats",
 ]

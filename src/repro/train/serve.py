@@ -43,3 +43,42 @@ def make_decode_step(cfg: ModelConfig, impl: Optional[str] = None) -> Callable:
         return next_tok, cache
 
     return decode_step
+
+
+def logit_stats(cfg: ModelConfig, logits):
+    """Per-row decode-path SDC signals from the last-position logits
+    (B, V): a non-finite flag and the softmax entropy in nats.
+
+    Entropy is the serving sibling of the training loss for tier-3
+    detection (repro.sdc.DecodeSentinel): corruption that scrambles params
+    or cache rows pushes the distribution toward uniform — entropy jumps
+    toward log(V) — while non-finite logits trip the flag directly.  Pad
+    vocab columns are already masked to NEG_INF by the caller, so they
+    carry ~zero probability and do not bias the entropy."""
+    nonfinite = 1.0 - jnp.all(jnp.isfinite(logits), axis=-1).astype(
+        jnp.float32)
+    # entropy via logsumexp: H = lse - sum(p * z); immune to the NEG_INF
+    # pad-vocab columns (p -> 0 there), fp32 throughout
+    z = logits
+    lse = jax.scipy.special.logsumexp(z, axis=-1)
+    p = jax.nn.softmax(z, axis=-1)
+    entropy = lse - jnp.sum(jnp.where(p > 0, p * z, 0.0), axis=-1)
+    return {"nonfinite": nonfinite, "entropy": entropy}
+
+
+def make_serve_decode_step(cfg: ModelConfig,
+                           impl: Optional[str] = None) -> Callable:
+    """Decode step for the serving engine: next token + new cache + the
+    per-row logit stats the decode sentinel guards.  Shapes match
+    ``make_decode_step``; the engine vmaps it over the cache pool's slot
+    axis (see serve/cache_pool.py) so each row advances at its own
+    position."""
+    def decode_step(params, batch, cache):
+        logits, cache, _ = forward(cfg, params, batch, mode="decode",
+                                   cache=cache, impl=impl)
+        logits = _mask_pad_vocab(cfg, logits.astype(jnp.float32))
+        last = logits[:, -1]
+        next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return next_tok, cache, logit_stats(cfg, last)
+
+    return decode_step

@@ -1,0 +1,484 @@
+"""Serving engine: scheduler/pool invariants, continuous-batching
+determinism, and E2E replica failover (docs/serving.md).
+
+The failover contract under test: killing a replica mid-decode loses zero
+requests, and the retried requests' greedy token streams are identical to
+an uninterrupted run — greedy decode is a pure function of the prompt, so
+re-execution on a survivor replays the same stream.
+"""
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FaultInjector, HeartbeatMonitor, SimulatedFailure
+from repro.models import get_config, init_cache, init_params
+from repro.sdc import DecodeSentinel
+from repro.serve import (CachePool, NoHealthyReplicasError, PoolExhausted,
+                         QueueFull, Scheduler, ServeEngine)
+from repro.train import logit_stats, make_decode_step, make_prefill_step
+
+CFG = get_config("granite-3-8b", tiny=True)
+KEY = jax.random.PRNGKey(0)
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, KEY)
+
+
+def _prompts(n, lens=(4, 6, 8, 5, 7, 4, 9, 6)):
+    return [list(range(5 + i, 5 + i + lens[i % len(lens)]))
+            for i in range(n)]
+
+
+def _reference_streams(params, prompts, gen):
+    """B=1 sequential greedy decode per request — the oracle every engine
+    configuration must reproduce token for token."""
+    prefill = jax.jit(make_prefill_step(CFG))
+    decode = jax.jit(make_decode_step(CFG))
+    out = []
+    for p in prompts:
+        toks = jnp.asarray(p, jnp.int32)[None]
+        tok, row = prefill(params, {"tokens": toks},
+                           init_cache(CFG, 1, MAX_LEN))
+        s = [int(tok[0])]
+        for _ in range(gen - 1):
+            tok, row = decode(params, {"tokens": tok[:, None]}, row)
+            s.append(int(tok[0]))
+        out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# scheduler state machine + admission control
+# ---------------------------------------------------------------------------
+
+def test_scheduler_admission_control():
+    s = Scheduler(max_pending=2)
+    s.submit([1], 4)
+    s.submit([2], 4)
+    with pytest.raises(QueueFull):
+        s.submit([3], 4)
+    assert s.pending() == 2
+
+
+def test_scheduler_state_machine_and_requeue():
+    s = Scheduler()
+    r = s.submit([1, 2], 3)
+    with pytest.raises(ValueError):
+        s.start_decode(r, 7)             # QUEUED -> DECODE is illegal
+    assert s.pop_queued() is r
+    s.start_prefill(r, slot=0, replica=0)
+    s.start_decode(r, 7)
+    assert s.append_token(r, 8) is False
+    # replica dies: requeue discards partial output, request back at front
+    s.requeue(r)
+    assert r.state == "QUEUED" and r.tokens == [] and r.slot is None
+    assert s.pop_queued() is r and r.retries == 1
+    s.start_prefill(r, 1, 1)
+    s.start_decode(r, 7)
+    s.append_token(r, 8)
+    assert s.append_token(r, 9) is True  # budget reached
+    s.finish(r)
+    assert s.all_done() and s.results() == {r.rid: [7, 8, 9]}
+
+
+def test_scheduler_retry_budget_exhausted():
+    s = Scheduler(max_retries=1)
+    r = s.submit([1], 2)
+    for _ in range(2):
+        s.pop_queued()
+        s.start_prefill(r, 0, 0)
+        s.requeue(r)
+    assert r.state == "FAILED" and s.failed_rids == [r.rid]
+    assert s.all_done() and r.rid not in s.results()
+
+
+def test_scheduler_requeued_requests_keep_fifo_front():
+    s = Scheduler()
+    a, b, c = (s.submit([i], 2) for i in range(3))
+    s.pop_queued(); s.start_prefill(a, 0, 0)
+    s.pop_queued(); s.start_prefill(b, 1, 0)
+    # drain in slot order: appendleft b then... router drains [a, b]; the
+    # engine requeues in drained order, so b ends up in front of a — both
+    # ahead of the never-started c is NOT required; what matters is no
+    # request is lost and each retry re-enters the queue exactly once
+    s.requeue(a)
+    s.requeue(b)
+    popped = [s.pop_queued().rid for _ in range(3)]
+    assert sorted(popped) == [a.rid, b.rid, c.rid]
+    assert popped[-1] == c.rid           # retried requests go first
+
+
+# ---------------------------------------------------------------------------
+# cache pool slot invariants
+# ---------------------------------------------------------------------------
+
+def test_cache_pool_slot_accounting():
+    pool = CachePool(CFG, num_slots=2, max_len=MAX_LEN)
+    s0 = pool.acquire(rid=10)
+    s1 = pool.acquire(rid=11)
+    assert {s0, s1} == {0, 1} and pool.free_count == 0
+    with pytest.raises(PoolExhausted):
+        pool.acquire(rid=12)
+    pool.release(s0)
+    assert pool.free_count == 1 and pool.owner(s1) == 11
+    with pytest.raises(ValueError):
+        pool.release(s0)                 # double release
+    assert pool.acquire(rid=13) == s0    # recycled
+    drained = pool.release_all()
+    assert sorted(drained) == [11, 13]
+    assert pool.free_count == 2 and pool.active_slots == []
+
+
+def test_cache_pool_release_all_slot_order():
+    pool = CachePool(CFG, num_slots=3, max_len=MAX_LEN)
+    for rid in (7, 8, 9):
+        pool.acquire(rid)
+    assert pool.release_all() == [7, 8, 9]   # slot order == admission order
+
+
+def test_cache_pool_write_row_resets_stale_entries(params):
+    """Slot recycling must not leak the previous occupant's cache: a
+    recycled slot's pos entries beyond the new prompt must be -1 (empty),
+    not the old request's positions."""
+    pool = CachePool(CFG, num_slots=2, max_len=MAX_LEN)
+    prefill = jax.jit(make_prefill_step(CFG))
+    long_row = prefill(params, {"tokens": jnp.arange(20)[None] % 50},
+                       init_cache(CFG, 1, MAX_LEN))[1]
+    pool.write_row(0, long_row)
+    short_row = prefill(params, {"tokens": jnp.arange(4)[None] % 50},
+                        init_cache(CFG, 1, MAX_LEN))[1]
+    pool.write_row(0, short_row)
+    flat = jax.tree_util.tree_flatten_with_path(pool.cache)[0]
+    pos_leaves = [v for path, v in flat
+                  if getattr(path[-1], "key", "") == "pos"]
+    assert pos_leaves, "no pos leaves in cache"
+    for leaf in pos_leaves:
+        row0 = np.asarray(jax.device_get(leaf))[0]     # slot 0
+        assert (row0.reshape(-1, row0.shape[-1])[:, 4:] == -1).all(), \
+            "stale cache positions leaked through slot recycling"
+
+
+# ---------------------------------------------------------------------------
+# decode sentinel
+# ---------------------------------------------------------------------------
+
+def test_decode_sentinel_nonfinite_and_spike():
+    s = DecodeSentinel(spike_factor=4.0, warmup=3)
+    assert "non-finite" in s.observe(0, nonfinite=1.0, entropy=1.0)
+    for i in range(4):
+        assert s.observe(i, 0.0, 1.0) is None
+    assert "spike" in s.observe(5, 0.0, 10.0)
+    # the EMA did not absorb the spike: a healthy step still passes
+    assert s.observe(6, 0.0, 1.1) is None
+    assert s.trips == 2
+
+
+def test_decode_sentinel_absolute_ceiling_trips_during_warmup():
+    s = DecodeSentinel(abs_max_entropy=5.0, warmup=100)
+    assert s.observe(0, 0.0, 1.0) is None
+    assert "ceiling" in s.observe(1, 0.0, 5.5)
+    s.reset()
+    assert s.entropy_ema is None and s.observed == 0
+
+
+def test_logit_stats_entropy_and_nonfinite():
+    V = CFG.padded_vocab
+    uniform = jnp.zeros((1, V), jnp.float32)
+    st = logit_stats(CFG, uniform)
+    assert abs(float(st["entropy"][0]) - math.log(V)) < 1e-3
+    assert float(st["nonfinite"][0]) == 0.0
+    bad = uniform.at[0, 3].set(jnp.nan)
+    assert float(logit_stats(CFG, bad)["nonfinite"][0]) == 1.0
+    # a confident (peaked) distribution has near-zero entropy
+    peaked = jnp.full((1, V), -1e9, jnp.float32).at[0, 0].set(0.0)
+    assert float(logit_stats(CFG, peaked)["entropy"][0]) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# fault injector: replica-scoped events
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_replica_kill_targets_one_replica():
+    inj = FaultInjector().schedule_replica_kill(3, replica_id=1)
+    inj.check_replica(2, 1)              # before the step: nothing
+    inj.check_replica(3, 0)              # wrong replica: nothing
+    with pytest.raises(SimulatedFailure) as e:
+        inj.check_replica(3, 1)
+    assert e.value.kind == "replica-kill" and e.value.host_id == 1
+    inj.check_replica(4, 1)              # fires exactly once
+    assert inj.replica_kills == [(3, 1)]
+
+
+def test_fault_injector_kill_lands_past_scheduled_step():
+    # the victim may not be dispatched at the exact step — >= semantics
+    inj = FaultInjector().schedule_replica_kill(3, replica_id=0)
+    with pytest.raises(SimulatedFailure):
+        inj.check_replica(7, 0)
+
+
+def test_fault_injector_latency_spike():
+    inj = FaultInjector().schedule_latency_spike(1, 0.05, replica_id=1)
+    t0 = time.perf_counter()
+    inj.check_replica(1, 0)              # untargeted replica: no sleep
+    assert time.perf_counter() - t0 < 0.04
+    t0 = time.perf_counter()
+    inj.check_replica(1, 1)
+    assert time.perf_counter() - t0 >= 0.05
+    t0 = time.perf_counter()
+    inj.check_replica(1, 1)              # consumed
+    assert time.perf_counter() - t0 < 0.04
+
+
+# ---------------------------------------------------------------------------
+# heartbeat: replica-scoped registration
+# ---------------------------------------------------------------------------
+
+def test_monitor_watch_unwatch():
+    mon = HeartbeatMonitor(num_hosts=1, period=0.02).start()
+    try:
+        assert mon.alive_hosts() == [0]
+        mon.watch(5)                     # standby activated into the pool
+        assert 5 in mon.alive_hosts()
+        mon.unwatch(5)                   # decommissioned on purpose
+        assert 5 not in mon.alive_hosts()
+        assert 5 not in mon.failed_hosts()
+    finally:
+        mon.stop()
+
+
+# ---------------------------------------------------------------------------
+# engine: continuous batching correctness
+# ---------------------------------------------------------------------------
+
+def test_engine_streams_match_single_request_reference(params):
+    """5 requests through 3 slots (so admission waits on slot recycling):
+    every stream must equal the B=1 sequential oracle."""
+    prompts = _prompts(5)
+    gen = 6
+    ref = _reference_streams(params, prompts, gen)
+    eng = ServeEngine(CFG, params, num_replicas=1, slots_per_replica=3,
+                      max_len=MAX_LEN, fault_tolerant=False)
+    rids = [eng.submit(p, gen) for p in prompts]
+    res = eng.run()
+    eng.shutdown()
+    assert len(res) == len(prompts)
+    for rid, r in zip(rids, ref):
+        assert res[rid] == r
+
+
+def test_engine_interleave_determinism_any_arrival_order(params):
+    """Same request set, different arrival orders and a mid-flight second
+    wave: per-request token streams are identical — the invariant that
+    makes failover replay exact."""
+    prompts = _prompts(6)
+    gen = 5
+
+    def run_order(order, second_wave_at=None):
+        eng = ServeEngine(CFG, params, num_replicas=1,
+                          slots_per_replica=2, max_len=MAX_LEN,
+                          fault_tolerant=False)
+        streams = {}
+        first = order if second_wave_at is None else order[:3]
+        rids = {eng.submit(prompts[i], gen): i for i in first}
+        if second_wave_at is not None:
+            for _ in range(second_wave_at):
+                eng.step()               # decode already in flight...
+            for i in order[3:]:
+                rids[eng.submit(prompts[i], gen)] = i
+        res = eng.run()
+        eng.shutdown()
+        for rid, i in rids.items():
+            streams[i] = res[rid]
+        return streams
+
+    a = run_order([0, 1, 2, 3, 4, 5])
+    b = run_order([5, 3, 1, 0, 2, 4])
+    c = run_order([2, 4, 0, 5, 1, 3], second_wave_at=3)
+    assert a == b == c
+
+
+def test_engine_pool_never_oversubscribed(params):
+    """Slot admission invariant, checked at every engine step: at most
+    ``slots_per_replica`` owners, each owning exactly one live request."""
+    prompts = _prompts(5)
+    eng = ServeEngine(CFG, params, num_replicas=1, slots_per_replica=2,
+                      max_len=MAX_LEN, fault_tolerant=False)
+    for p in prompts:
+        eng.submit(p, 4)
+    rep = eng.router.replicas[0]
+    while not eng.scheduler.all_done():
+        eng.step()
+        owners = [rep.pool.owner(s) for s in rep.pool.active_slots]
+        assert len(owners) <= 2 and len(set(owners)) == len(owners)
+        for rid in owners:
+            assert eng.scheduler.requests[rid].state == "DECODE"
+    eng.shutdown()
+    assert len(eng.results()) == 5
+
+
+def test_engine_rejects_request_exceeding_cache_bound(params):
+    """prompt + generation beyond max_len must be rejected at admission:
+    past it the rolling cache wraps and silently corrupts the stream."""
+    eng = ServeEngine(CFG, params, slots_per_replica=2, max_len=8,
+                      fault_tolerant=False)
+    with pytest.raises(ValueError):
+        eng.submit(list(range(6)), 4)    # needs 9 positions > 8
+    eng.submit(list(range(5)), 4)        # needs exactly 8: admitted
+    eng.shutdown()
+
+
+def test_engine_rejects_encoder_only_and_embedding_models(params):
+    enc = get_config("hubert-xlarge", tiny=True)
+    with pytest.raises(ValueError):
+        ServeEngine(enc, {}, max_len=8)
+    vlm = get_config("qwen2-vl-2b", tiny=True)
+    with pytest.raises(ValueError):
+        ServeEngine(vlm, {}, max_len=8)
+
+
+# ---------------------------------------------------------------------------
+# E2E failover
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_e2e_failover_kill_replica_mid_decode(params):
+    """The acceptance-criteria scenario: 2 replicas, kill one mid-decode
+    via FaultInjector.schedule_replica_kill -> its requests drain, retry
+    on the survivor, token streams identical to an uninterrupted run,
+    zero dropped requests."""
+    prompts = _prompts(6)
+    gen = 8
+    ref = _reference_streams(params, prompts, gen)
+
+    inj = FaultInjector().schedule_replica_kill(3, replica_id=1)
+    # generous timeout: heartbeat detection is not under test here, and a
+    # GC/compile pause in a long pytest process must not false-positive
+    # the healthy replica
+    eng = ServeEngine(CFG, params, num_replicas=2, slots_per_replica=2,
+                      max_len=MAX_LEN, fault_tolerant=True,
+                      heartbeat_period=0.05, heartbeat_timeout_factor=40.0,
+                      fault_injector=inj)
+    rids = [eng.submit(p, gen) for p in prompts]
+    res = eng.run()
+    events = [e["event"] for e in eng.events]
+    retried = list(eng.scheduler.retried_rids)
+    eng.shutdown()
+
+    assert inj.replica_kills and inj.replica_kills[0][1] == 1
+    assert "replica_failed" in events
+    assert retried, "the kill must have drained in-flight requests"
+    assert eng.scheduler.failed_rids == []          # zero dropped
+    assert len(res) == len(prompts)                 # zero dropped
+    for rid, r in zip(rids, ref):
+        assert res[rid] == r, f"retried stream diverged for rid {rid}"
+
+
+@pytest.mark.slow
+def test_e2e_failover_heartbeat_detected(params):
+    """Fail-stop the paper's way: the replica's beats just stop (emitter
+    pause, no exception anywhere).  The monitor times out, the engine
+    drains the replica at the next step boundary, survivors finish
+    everything."""
+    prompts = _prompts(4)
+    gen = 24
+    ref = _reference_streams(params, prompts, gen)
+    period = 0.05
+    eng = ServeEngine(CFG, params, num_replicas=2, slots_per_replica=2,
+                      max_len=MAX_LEN, fault_tolerant=True,
+                      heartbeat_period=period, heartbeat_timeout_factor=6.0)
+    rids = [eng.submit(p, gen) for p in prompts]
+    victim = eng.router.replicas[1]
+    steps = 0
+    while not eng.scheduler.all_done():
+        eng.step()
+        steps += 1
+        if steps == 3:
+            victim.emitter.pause()       # beats stop; nothing raises
+            time.sleep(10 * period)      # let the timeout elapse
+    res = eng.results()
+    reasons = [e.get("reason") for e in eng.events
+               if e["event"] == "replica_failed"]
+    eng.shutdown()
+    assert "heartbeat-timeout" in reasons, eng.events
+    assert not victim.healthy
+    assert len(res) == len(prompts)
+    for rid, r in zip(rids, ref):
+        assert res[rid] == r
+
+
+@pytest.mark.slow
+def test_e2e_sentinel_flags_corrupt_replica(params):
+    """Decode-path SDC: scramble one replica's params mid-serve; the
+    DecodeSentinel flags the non-finite/garbage logits, the replica is
+    excluded, and the retried requests still produce oracle streams."""
+    prompts = _prompts(4)
+    gen = 10
+    ref = _reference_streams(params, prompts, gen)
+    eng = ServeEngine(CFG, params, num_replicas=2, slots_per_replica=2,
+                      max_len=MAX_LEN, fault_tolerant=True,
+                      heartbeat_period=0.05, heartbeat_timeout_factor=40.0,
+                      sentinel=True)
+    rids = [eng.submit(p, gen) for p in prompts]
+    for _ in range(2):
+        eng.step()
+    victim = eng.router.replicas[1]
+    victim.params = jax.tree.map(lambda x: x * jnp.nan, victim.params)
+    res = eng.run()
+    reasons = [e.get("reason", "") for e in eng.events
+               if e["event"] == "replica_failed"]
+    eng.shutdown()
+    assert any(r.startswith("sentinel:") for r in reasons), eng.events
+    assert len(res) == len(prompts)
+    for rid, r in zip(rids, ref):
+        assert res[rid] == r
+
+
+@pytest.mark.slow
+def test_e2e_warm_standby_restores_capacity(tmp_path, params):
+    """Kill the ONLY replica: a warm standby restored via
+    CheckpointManager.restore_latest takes over and finishes every
+    request with oracle streams."""
+    from repro.core import CheckpointManager
+    from repro.serve import make_standby_source
+
+    prompts = _prompts(3)
+    gen = 6
+    ref = _reference_streams(params, prompts, gen)
+    manager = CheckpointManager(str(tmp_path), fsync="none")
+    manager.save(0, {"params": params})
+    like = jax.eval_shape(lambda: params)
+
+    inj = FaultInjector().schedule_replica_kill(2, replica_id=0)
+    eng = ServeEngine(CFG, params, num_replicas=1, slots_per_replica=2,
+                      max_len=MAX_LEN, fault_tolerant=True,
+                      heartbeat_period=0.05, heartbeat_timeout_factor=40.0,
+                      fault_injector=inj)
+    eng.add_standby(make_standby_source(manager, like))
+    rids = [eng.submit(p, gen) for p in prompts]
+    res = eng.run()
+    events = [e["event"] for e in eng.events]
+    eng.shutdown()
+    manager.close()
+    assert "standby_activated" in events, eng.events
+    assert len(res) == len(prompts)
+    for rid, r in zip(rids, ref):
+        assert res[rid] == r
+
+
+def test_all_replicas_dead_no_standby_raises(params):
+    inj = FaultInjector().schedule_replica_kill(0, replica_id=0)
+    eng = ServeEngine(CFG, params, num_replicas=1, slots_per_replica=2,
+                      max_len=MAX_LEN, fault_tolerant=True,
+                      heartbeat_period=0.05, heartbeat_timeout_factor=40.0,
+                      fault_injector=inj)
+    eng.submit(_prompts(1)[0], 4)
+    with pytest.raises(NoHealthyReplicasError):
+        eng.run()
+    eng.shutdown()
