@@ -15,6 +15,9 @@ test -f tests/test_elastic_loop.py
 # and the serving-engine suite (tests/test_serve.py; its multi-replica E2E
 # cases carry the `slow` marker, so --fast skips them)
 test -f tests/test_serve.py
+# and the delta-checkpoint suite (tests/test_delta.py chain/GC/bit-exact
+# coverage + block_hash kernel sweeps in tests/test_kernels.py)
+test -f tests/test_delta.py
 ARGS=()
 for a in "$@"; do
   if [ "$a" = "--fast" ]; then

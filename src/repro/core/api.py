@@ -50,6 +50,14 @@ class DependabilityConfig:
       or "none" (no fsync; atomic rename only — tests/tmpfs).
     - ``async_save``: hand serialization to a writer thread; only the
       device->host snapshot stays on the BSP critical path.
+    - ``delta_checkpoint``: incremental saves — per-block hashes computed
+      on device (block_hash kernel) pick out the blocks that changed since
+      the last committed checkpoint; only those cross the device->host
+      link and hit disk.  ``delta_block`` elements per block;
+      ``full_every`` bounds the reference-chain depth with periodic full
+      saves.  The policy's measured C shrinks accordingly (and is tracked
+      per save kind, so the Young/Daly interval sizes to the amortized
+      cost).  See docs/checkpointing.md.
 
     Interruption detection:
     - ``heartbeat``: host 0 runs the UDP monitor; other hosts MUST set
@@ -77,6 +85,9 @@ class DependabilityConfig:
     device_codec: bool = False                # quantize before device_get
     io_threads: int = 0                       # shard I/O pool size (0=auto)
     fsync: str = "batch"                      # "batch" | "per_file" | "none"
+    delta_checkpoint: bool = False            # write only dirty blocks
+    delta_block: int = 65536                  # elements per delta block
+    full_every: int = 8                       # full save every N saves
     keep: int = 3
     verify_crc: bool = True
     heartbeat: bool = False
@@ -108,7 +119,9 @@ class Dependability:
             config.checkpoint_dir, host_id=host_id, num_hosts=num_hosts,
             codec=config.codec, device_codec=config.device_codec,
             io_threads=config.io_threads, fsync=config.fsync,
-            verify_crc=config.verify_crc, keep=config.keep)
+            verify_crc=config.verify_crc, keep=config.keep,
+            delta=config.delta_checkpoint, delta_block=config.delta_block,
+            full_every=config.full_every)
         self.policy = CheckpointPolicy(
             mode=config.policy_mode, every_n=config.every_n,
             system=config.system, formula=config.policy_formula)
@@ -275,7 +288,10 @@ class Dependability:
         stats = self.manager.save(step, state, local, local_shards=shards,
                                   blocking=blocking)
         cost = time.perf_counter() - t0  # on-critical-path cost
-        self.policy.observe_checkpoint(cost)
+        # delta mode: feed the kind along so the policy amortizes cheap
+        # deltas against periodic fulls instead of whipsawing one EMA
+        self.policy.observe_checkpoint(
+            cost, kind=stats.kind if self.config.delta_checkpoint else None)
         self.policy.record_checkpoint(step)
         self.save_history.append(stats)
         if self.scrubber is not None:

@@ -26,6 +26,22 @@ import numpy as np
 BLOCK = 256
 
 
+def validate_delta_block(block_elems: int) -> int:
+    """Delta checkpointing slices shards into ``block_elems``-element
+    blocks and encodes the dirty ones standalone; the result is
+    bit-identical to the matching slice of a full-save encode ONLY when
+    the delta block aligns with the codec's 256-element quantization
+    blocks (each q-block is self-contained: own amax, own scale).  Guard
+    the invariant at construction instead of diverging at restore."""
+    block_elems = int(block_elems)
+    if block_elems <= 0 or block_elems % BLOCK:
+        raise ValueError(
+            f"delta_block must be a positive multiple of the codec block "
+            f"({BLOCK} elements) so per-block int8 encodes compose "
+            f"bit-identically with full-save encodes; got {block_elems}")
+    return block_elems
+
+
 class Codec:
     name = "base"
 

@@ -117,6 +117,24 @@ def fsync_path(path: str) -> None:
         os.close(fd)
 
 
+def pid_alive(pid: int) -> bool:
+    """Is ``pid`` a live process?  Signal 0 probes without delivering;
+    EPERM means alive-but-not-ours (a co-hosted writer under another uid).
+    Used by the stale-staging sweep: a ``step_<n>.tmp.<pid>`` directory
+    whose owner is dead will never be committed and can be reclaimed."""
+    if pid <= 0:
+        return False
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    except OSError:
+        return False
+    return True
+
+
 class ShardIOEngine:
     """ThreadPoolExecutor-backed shard writer/reader with batched fsync."""
 

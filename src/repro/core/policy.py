@@ -79,6 +79,10 @@ class CheckpointPolicy:
         self._ema = ema
         self.step_time_s: Optional[float] = None
         self.ckpt_cost_s: Optional[float] = None
+        # per-kind cost tracking (delta checkpointing makes C bimodal:
+        # cheap deltas + periodic expensive fulls; a single EMA whipsaws)
+        self._kind_cost: dict = {}
+        self._kind_count: dict = {}
         self.min_interval = min_interval
         self.max_interval = max_interval
         self._last_ckpt_step: Optional[int] = None
@@ -88,9 +92,27 @@ class CheckpointPolicy:
         self.step_time_s = seconds if self.step_time_s is None else \
             self._ema * self.step_time_s + (1 - self._ema) * seconds
 
-    def observe_checkpoint(self, seconds: float) -> None:
-        self.ckpt_cost_s = seconds if self.ckpt_cost_s is None else \
-            self._ema * self.ckpt_cost_s + (1 - self._ema) * seconds
+    def observe_checkpoint(self, seconds: float,
+                           kind: Optional[str] = None) -> None:
+        """Feed one measured checkpoint cost into the C estimate.
+
+        ``kind=None``: single EMA (the legacy full-save pipeline).  With
+        ``kind`` ("full"/"delta") each kind keeps its own EMA and C becomes
+        the count-weighted mean across kinds — the AMORTIZED per-checkpoint
+        cost eq. (1) actually pays under a full_every cadence, instead of
+        an EMA that whipsaws between the two modes."""
+        if kind is None:
+            self.ckpt_cost_s = seconds if self.ckpt_cost_s is None else \
+                self._ema * self.ckpt_cost_s + (1 - self._ema) * seconds
+            return
+        prev = self._kind_cost.get(kind)
+        self._kind_cost[kind] = seconds if prev is None else \
+            self._ema * prev + (1 - self._ema) * seconds
+        self._kind_count[kind] = self._kind_count.get(kind, 0) + 1
+        total = sum(self._kind_count.values())
+        self.ckpt_cost_s = sum(
+            self._kind_cost[k] * self._kind_count[k]
+            for k in self._kind_cost) / total
 
     # ---- decisions ----
     def interval_steps(self) -> int:

@@ -16,6 +16,10 @@ Kernels (DESIGN.md S3):
   abft_matmul     — checksum-extended matmul (Huang/Abraham ABFT): detects
                     and corrects a single corrupted output element; the
                     tier-1 SDC guard (docs/sdc.md).
+  block_hash      — per-block uint32 mod-2^32 word sums: the dirty-block
+                    detector behind incremental (delta) checkpoints AND the
+                    SDC scrubber's leaf checksums (one reduction idiom,
+                    two consumers — docs/checkpointing.md, docs/sdc.md).
 
 All validated against their oracles in interpret mode on CPU (this container
 has no TPU); on TPU hardware the same pallas_call lowers natively.

@@ -1,0 +1,4 @@
+from repro.kernels.block_hash.ops import (BLOCK_ELEMS, block_hashes,
+                                          checksum_words, words_view)
+
+__all__ = ["BLOCK_ELEMS", "block_hashes", "checksum_words", "words_view"]

@@ -1,0 +1,44 @@
+"""Numpy oracle for the block-hash kernel (also the host-shard hasher).
+
+Bit-identical to ops.words_view / ops.block_hashes: the same storage words,
+the same wraparound mod-2^32 sums.  CheckpointManager uses this path
+directly for shards that are already numpy arrays (no device round-trip).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.block_hash.ops import BLOCK_ELEMS
+
+
+def words_np(arr: np.ndarray) -> np.ndarray:
+    """Flat uint32 view of the array's storage words (matches
+    ops.words_view bit for bit)."""
+    a = np.ascontiguousarray(arr).reshape(-1)
+    size = a.dtype.itemsize
+    if size % 4 == 0:
+        return a.view(np.uint32)            # 4-byte: 1 word; 8-byte: 2 words
+    if size == 2:
+        return a.view(np.uint16).astype(np.uint32)
+    return a.view(np.uint8).astype(np.uint32)
+
+
+def block_hashes_np(arr: np.ndarray,
+                    block_elems: int = BLOCK_ELEMS) -> np.ndarray:
+    """(NB,) uint32 per-block position-weighted word sums mod 2^32
+    (NB = ceil(size/block); weight of word j within its block is 2j+1 —
+    see kernel.py for the single-bit-flip / permutation rationale)."""
+    w = words_np(arr)
+    wpe = 2 if arr.dtype.itemsize == 8 else 1
+    width = block_elems * wpe
+    pad = (-w.size) % width
+    if pad:
+        w = np.pad(w, (0, pad))
+    weights = (2 * np.arange(width, dtype=np.uint32) + 1)[None, :]
+    # uint32 multiply/accumulate wraps mod 2^32 silently — exactly the hash
+    return (w.reshape(-1, width) * weights).sum(axis=1, dtype=np.uint32)
+
+
+def checksum_np(arr: np.ndarray, block_elems: int = BLOCK_ELEMS) -> int:
+    """Whole-leaf checksum == uint32 sum of block_hashes_np."""
+    return int(block_hashes_np(arr, block_elems).sum(dtype=np.uint32))

@@ -71,6 +71,14 @@ def main(argv=None) -> int:
     ap.add_argument("--num-nodes", type=int, default=1)
     ap.add_argument("--async-save", action="store_true")
     ap.add_argument("--codec", default=None, choices=[None, "int8"])
+    ap.add_argument("--delta-checkpoint", action="store_true",
+                    help="incremental saves: write only blocks whose "
+                         "on-device hash changed since the last checkpoint")
+    ap.add_argument("--delta-block", type=int, default=65536,
+                    help="elements per delta block (multiple of 256)")
+    ap.add_argument("--full-every", type=int, default=8,
+                    help="force a full save every N checkpoints "
+                         "(bounds the delta reference-chain depth)")
     ap.add_argument("--heartbeat", action="store_true")
     ap.add_argument("--inject-failure", type=int, default=0,
                     help="simulate a fail-stop at this step")
@@ -104,6 +112,9 @@ def main(argv=None) -> int:
         every_n=args.every_n,
         async_save=args.async_save,
         codec=args.codec,
+        delta_checkpoint=args.delta_checkpoint,
+        delta_block=args.delta_block,
+        full_every=args.full_every,
         heartbeat=args.heartbeat,
         scrub=args.scrub,
         scrub_fraction=args.scrub_fraction,
@@ -157,8 +168,12 @@ def main(argv=None) -> int:
         wall = time.perf_counter() - t0
 
     n_saves = len(dep.save_history)
+    n_delta = sum(1 for s in dep.save_history
+                  if getattr(s, "kind", "full") == "delta")
+    delta_info = (f" ({n_saves - n_delta} full + {n_delta} delta)"
+                  if args.delta_checkpoint else "")
     print(f"[train] {info['status']} in {wall:.1f}s; restarts="
-          f"{info['restarts']}; checkpoints={n_saves}; "
+          f"{info['restarts']}; checkpoints={n_saves}{delta_info}; "
           f"young-daly interval={dep.policy.interval_steps()} steps")
     events = [h["event"] for h in info["history"] if "event" in h]
     if events:

@@ -1,37 +1,30 @@
 """Leaf checksums for the state scrubber.
 
-Device leaves are reduced on device — bitcast to unsigned words and summed
-mod 2^32 (one cheap pass, no device->host transfer of the data; a single
-flipped bit changes exactly one word by ±2^k, which can never cancel mod
-2^32, so any single-bit upset is caught).  Host leaves reuse the zero-copy
-``crc32_array`` from core/io_engine.py.  Either way a leaf's checksum is a
-plain int, stable across recomputation on identical bytes.
+Device leaves are reduced on device — bitcast to 32-bit storage words and
+reduced mod 2^32 with odd position weights (one cheap pass, no
+device->host transfer of the data; a single flipped bit changes exactly
+one word by ±2^k, hence its block hash by ±2^k*(2j+1) — an odd multiple of
+2^k that can never cancel mod 2^32 — so any single-bit upset is caught).
+The word view and the reduction live in ``repro/kernels/block_hash`` — the
+SAME kernel that detects dirty blocks for incremental checkpoints: a leaf
+checksum is the mod-2^32 sum of its block hashes, so scrub and delta share
+one pass over the bytes.  Host leaves reuse the zero-copy ``crc32_array`` from
+core/io_engine.py.  Either way a leaf's checksum is a plain int, stable
+across recomputation on identical bytes.
 """
 from __future__ import annotations
 
 from typing import Any, List, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-
-def _sum32(x) -> jax.Array:
-    """Mod-2^32 sum of the array's storage words (uint32 wraparound)."""
-    if x.dtype.itemsize == 4:
-        w = jax.lax.bitcast_convert_type(x, jnp.uint32)
-    elif x.dtype.itemsize == 2:
-        w = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
-    elif x.dtype.itemsize == 1:
-        w = jax.lax.bitcast_convert_type(x, jnp.uint8).astype(jnp.uint32)
-    else:  # 8-byte dtypes bitcast to a trailing (..., 2) uint32 axis
-        w = jax.lax.bitcast_convert_type(x, jnp.uint32)
-    return jnp.sum(w, dtype=jnp.uint32)
+from repro.kernels.block_hash.ops import checksum_words
 
 
 @jax.jit
 def _device_sums(leaves):
-    return [_sum32(x) for x in leaves]
+    return [checksum_words(x) for x in leaves]
 
 
 def _host_crc(leaf) -> int:

@@ -37,7 +37,7 @@ from repro.core.heartbeat import HeartbeatMonitor
 from repro.sdc import DecodeSentinel
 from repro.serve.replica import Replica, ServeFns
 from repro.serve.router import NoHealthyReplicasError, ReplicaRouter
-from repro.serve.scheduler import DECODE, Scheduler
+from repro.serve.scheduler import DECODE, Scheduler, _trim
 
 
 def pctl(xs, q: float) -> float:
@@ -119,6 +119,20 @@ class ServeEngine:
     def results(self) -> Dict[int, List[int]]:
         return self.scheduler.results()
 
+    def reap(self, rid: int) -> List[int]:
+        """Consume one finished request's tokens and evict its record
+        (``scheduler.requests`` is bounded only if results are reaped)."""
+        return list(self.scheduler.reap(rid).tokens)
+
+    def drain_finished(self) -> Dict[int, List[int]]:
+        """Consume-and-evict every finished request: rid -> tokens (FAILED
+        requests drain too, with whatever partial tokens they kept — callers
+        distinguish them via ``scheduler.failed_rids``).  Under sustained
+        traffic call this after collecting results, or the per-request
+        records leak."""
+        return {r.rid: list(r.tokens)
+                for r in self.scheduler.reap_finished()}
+
     def request_latencies(self) -> List[Tuple[int, float, float]]:
         """[(rid, time-to-first-token, total latency), ...] for DONE
         requests.  A retried request's TTFT is measured to its RETRY's
@@ -186,6 +200,7 @@ class ServeEngine:
     def _record(self, event: str, **kw) -> None:
         self.events.append({"t": time.perf_counter(), "step":
                             self.engine_step, "event": event, **kw})
+        _trim(self.events)   # bounded observability under sustained traffic
 
     def _drain_detected(self) -> None:
         for rid in self.router.take_detected():
@@ -197,9 +212,8 @@ class ServeEngine:
         # requeue in REVERSE slot order: each requeue prepends, so the
         # reversed walk leaves the queue front in slot (= admission) order
         for r in reversed(drained):
-            req = self.scheduler.requests[r]
-            self.scheduler.requeue(req)
-            req.t_first_token = None     # the retry restarts the stream
+            # requeue clears t_first_token: the retry restamps the stream
+            self.scheduler.requeue(self.scheduler.requests[r])
         self._record("replica_failed", replica=rep.id, reason=reason,
                      drained=len(drained))
         if self.router.standby_count:

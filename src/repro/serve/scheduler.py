@@ -38,6 +38,17 @@ class QueueFull(RuntimeError):
     """Admission control rejected the request (queue at max_pending)."""
 
 
+# retained tail of the observability lists (retried_rids/failed_rids and
+# ServeEngine.events): unbounded growth under sustained traffic would be
+# the same leak class reap() exists to close
+OBSERVABILITY_CAP = 10_000
+
+
+def _trim(lst: List) -> None:
+    if len(lst) > OBSERVABILITY_CAP:
+        del lst[:-OBSERVABILITY_CAP]
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -148,17 +159,47 @@ class Scheduler:
             raise ValueError(f"request {req.rid} not in flight ({req.state})")
         req.retries += 1
         self.retried_rids.append(req.rid)
+        # the pre-failure first token was discarded with the partial
+        # output: leaving its timestamp in place would make a retried
+        # request report its PRE-FAILURE TTFT and understate failover
+        # latency — the retry restamps it when its stream actually starts
+        req.t_first_token = None
+        _trim(self.retried_rids)
         if req.retries > self.max_retries:
             req.state = FAILED
             req.slot = None
             req.replica = None
             self.failed_rids.append(req.rid)
+            _trim(self.failed_rids)
             return
         self._transition(req, QUEUED)
         req.tokens = []
         req.slot = None
         req.replica = None
         self._queue.appendleft(req.rid)
+
+    def reap(self, rid: int) -> Request:
+        """Evict one finished (DONE/FAILED) request and return it.
+
+        Without eviction ``requests`` grows without bound — the engine
+        leaks one Request per served stream under sustained traffic.  Call
+        after the result has been consumed; reaping an in-flight or queued
+        request is a caller bug and raises."""
+        req = self.requests.get(rid)
+        if req is None:
+            raise KeyError(f"request {rid} unknown (already reaped?)")
+        if req.state not in (DONE, FAILED):
+            raise ValueError(f"request {rid} not finished ({req.state}); "
+                             "reap only after DONE/FAILED")
+        del self.requests[rid]
+        return req
+
+    def reap_finished(self) -> List[Request]:
+        """Evict and return every finished request (drain path for
+        sustained serving: keeps ``requests`` bounded by in-flight+queued)."""
+        done = [r.rid for r in self.requests.values()
+                if r.state in (DONE, FAILED)]
+        return [self.reap(rid) for rid in done]
 
     # ------------------------------------------------------------------
     # queries

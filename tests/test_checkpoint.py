@@ -2,6 +2,7 @@
 device-codec fast path, parallel I/O engine, failure propagation."""
 import json
 import os
+import subprocess
 
 import jax
 import jax.numpy as jnp
@@ -233,6 +234,94 @@ def test_restore_specific_step(tmp_path):
     r2, _ = mgr.restore(step=2, like=_state())
     assert np.array_equal(np.asarray(r2["params"]["w"]),
                           np.asarray(_state(key=2)["params"]["w"]))
+
+
+def test_span_gap_raises_instead_of_uninitialized_memory(tmp_path):
+    """A lost host manifest used to leave np.empty garbage in the spans it
+    covered — silently.  Restore must validate that shard spans exactly
+    tile each leaf and raise IOError so restore_latest walks back."""
+    from repro.core.io_engine import crc32_array
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    st = {"w": jnp.arange(8.0)}
+    mgr.save(1, st)
+    mgr.save(2, st)
+    # simulate the merged-manifest gap: step 2's only shard now claims to
+    # cover just half the leaf (as if the other half's manifest was lost)
+    man_p = tmp_path / "step_00000002" / "manifest_h0.json"
+    man = json.loads(man_p.read_text())
+    sh = man["arrays"]["w"]["shards"][0]
+    half = np.arange(4.0, dtype=np.float32)
+    np.save(tmp_path / "step_00000002" / sh["file"], half)
+    sh["spans"] = [[0, 4]]
+    sh["crc32"] = crc32_array(half)
+    man_p.write_text(json.dumps(man))
+    with pytest.raises(IOError, match="cover"):
+        mgr.restore(step=2, like=st)
+    _, _, got, skipped = mgr.restore_latest(like=st)
+    assert got == 1
+    assert skipped and skipped[0][0] == 2
+
+
+def test_overlapping_spans_raise(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = {"w": jnp.arange(8.0)}
+    mgr.save(1, st)
+    man_p = tmp_path / "step_00000001" / "manifest_h0.json"
+    man = json.loads(man_p.read_text())
+    sh = dict(man["arrays"]["w"]["shards"][0])
+    sh["spans"] = [[4, 8]]               # second shard overlapping [0,8)
+    man["arrays"]["w"]["shards"].append(sh)
+    man_p.write_text(json.dumps(man))
+    with pytest.raises(IOError, match="overlap"):
+        mgr.restore(step=1, like=st)
+
+
+def test_replicated_identical_spans_dedupe_cleanly(tmp_path):
+    """Two host manifests carrying the SAME span (a replicated leaf) are
+    legitimate — dedupe, don't flag as overlap."""
+    mgr = CheckpointManager(str(tmp_path))
+    st = {"w": jnp.arange(8.0)}
+    mgr.save(1, st)
+    man_p = tmp_path / "step_00000001" / "manifest_h0.json"
+    man = json.loads(man_p.read_text())
+    man["arrays"]["w"]["shards"].append(
+        dict(man["arrays"]["w"]["shards"][0]))
+    man_p.write_text(json.dumps(man))
+    restored, _ = mgr.restore(step=1, like=st)
+    assert np.array_equal(np.asarray(restored["w"]), np.asarray(st["w"]))
+
+
+# ---- stale staging-dir sweep (crashed async writers) ----
+
+def test_stale_staging_swept_on_init_and_gc(tmp_path):
+    """Crashed writers leak step_<n>.tmp.<pid> dirs forever unless the
+    manager reclaims them: on init, and at every GC."""
+    stale = tmp_path / "step_00000009.tmp.999999983"    # ESRCH pid: dead
+    os.makedirs(stale)
+    (stale / "junk.npy").write_bytes(b"xx")
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    assert not stale.exists()                            # swept on init
+    os.makedirs(stale)
+    st = _state()
+    mgr.save(1, st)
+    mgr.save(2, st)                                      # triggers _gc
+    assert not stale.exists()                            # swept at GC
+    restored, _ = mgr.restore(like=st)
+    assert _trees_equal(st, restored)
+
+
+def test_live_foreign_staging_not_swept(tmp_path):
+    """A staging dir owned by another LIVE process (a co-hosted writer
+    mid-save) must survive the sweep."""
+    live = subprocess.Popen(["sleep", "30"])
+    try:
+        peer = tmp_path / f"step_00000003.tmp.{live.pid}"
+        os.makedirs(peer)
+        CheckpointManager(str(tmp_path))
+        assert peer.exists()
+    finally:
+        live.kill()
+        live.wait()
 
 
 # ---- local-SCOPE shard files (elastic failover loop) ----

@@ -1,0 +1,331 @@
+"""Incremental (delta) checkpointing: dirty-block detection, chain
+restore, bit-exactness vs the full-save oracle across codec configs,
+corrupt-parent invalidation, chain-aware GC, and the amortized policy C.
+
+Small ``delta_block`` values (multiples of the 256-element codec block)
+keep the states tiny; the kernel path itself is swept against its numpy
+oracle in tests/test_kernels.py.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CheckpointManager
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _trees_equal(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(fa, fb))
+
+
+def _state(bump_block=None, base=None):
+    """~4000-element leaf (16 blocks @256) + 2000-element leaf + scalar."""
+    st = base or {"w": jax.random.normal(KEY, (40, 100)),
+                  "b": jax.random.normal(jax.random.fold_in(KEY, 1), (2000,)),
+                  "step": jnp.asarray(0, jnp.int32)}
+    if bump_block is not None:
+        w = np.asarray(st["w"]).reshape(-1).copy()
+        w[bump_block * 256] += 3.0
+        st = {**st, "w": jnp.asarray(w).reshape(40, 100),
+              "step": st["step"] + 1}
+    return st
+
+
+def _manifest(tmp_path, step):
+    p = os.path.join(str(tmp_path), f"step_{step:08d}", "manifest_h0.json")
+    with open(p) as f:
+        return json.load(f)
+
+
+def test_first_save_is_full_then_deltas(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=100)
+    st = _state()
+    s1 = mgr.save(1, st)
+    assert s1.kind == "full"
+    st2 = _state(bump_block=3, base=st)
+    s2 = mgr.save(2, st2)
+    assert s2.kind == "delta"
+    # only the touched w-block and the bumped scalar moved; b stayed clean
+    man = _manifest(tmp_path, 2)
+    wd = man["arrays"]["w"]["shards"][0]["delta"]
+    assert wd["local"] == [3]
+    assert sorted(int(b) for bs in wd["parents"].values()
+                  for b in bs) == [b for b in range(16) if b != 3]
+    bd = man["arrays"]["b"]["shards"][0]["delta"]
+    assert bd["local"] == []                       # pure reference, no file
+    assert man["arrays"]["b"]["shards"][0]["file"] is None
+    assert s2.bytes_written < s1.bytes_written / 4
+
+
+def test_delta_steady_state_writes_shrink(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=100)
+    st = _state()
+    full = mgr.save(1, st)
+    st = _state(bump_block=5, base=st)
+    delta = mgr.save(2, st)
+    assert delta.dirty_blocks < delta.total_blocks
+    assert delta.bytes_written < full.bytes_written / 4
+
+
+@pytest.mark.parametrize("codec_kw", [
+    dict(), dict(codec="int8"), dict(device_codec=True),
+])
+def test_delta_restore_bit_exact_vs_full_oracle(tmp_path, codec_kw):
+    """full -> delta -> delta must restore BIT-IDENTICAL to a one-shot
+    full save of the final state under the same codec config."""
+    mgr = CheckpointManager(str(tmp_path / "delta"), delta=True,
+                            delta_block=256, full_every=100, **codec_kw)
+    st = _state()
+    mgr.save(1, st)
+    st = _state(bump_block=2, base=st)
+    mgr.save(2, st)
+    st = _state(bump_block=9, base=st)
+    mgr.save(3, st)
+    restored, _ = mgr.restore(step=3, like=st)
+
+    oracle = CheckpointManager(str(tmp_path / "full"), **codec_kw)
+    oracle.save(3, st)
+    expect, _ = oracle.restore(step=3, like=st)
+    assert _trees_equal(restored, expect)
+
+
+def test_fresh_manager_restores_chain_and_saves_full(tmp_path):
+    """Restore needs only the manifests (no in-memory base); and after a
+    restore/restart the next save is a full one — delta references into
+    pre-rollback steps would be meaningless."""
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=100)
+    st = _state()
+    mgr.save(1, st)
+    st = _state(bump_block=7, base=st)
+    mgr.save(2, st)
+
+    mgr2 = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                             full_every=100)
+    restored, _, got, skipped = mgr2.restore_latest(like=st)
+    assert got == 2 and not skipped
+    assert _trees_equal(restored, st)
+    s3 = mgr2.save(3, st)
+    assert s3.kind == "full"
+
+
+def test_corrupt_parent_invalidates_every_dependent_delta(tmp_path):
+    """Corrupting a mid-chain parent must walk restore_latest back past
+    ALL deltas that reference it, surfaced in ``skipped``."""
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=100, keep=10)
+    st = _state()
+    mgr.save(1, st)                      # full
+    st = _state(bump_block=1, base=st)
+    mgr.save(2, st)                      # delta <- 1
+    st3 = _state(bump_block=8, base=st)
+    mgr.save(3, st3)                     # delta <- 1, 2 (block 1 lives at 2)
+    f2 = next(f for f in os.listdir(tmp_path / "step_00000002")
+              if f.startswith("w.s"))
+    p = tmp_path / "step_00000002" / f2
+    raw = bytearray(p.read_bytes())
+    raw[-1] ^= 0xFF
+    p.write_bytes(bytes(raw))
+    restored, _, got, skipped = mgr.restore_latest(like=st)
+    assert got == 1
+    assert [s for s, _ in skipped] == [3, 2]
+    assert any("CRC" in r for _, r in skipped)
+    assert _trees_equal(restored, _state())
+
+
+def test_corrupt_full_parent_skips_to_previous_full_chain(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=2, keep=10)
+    st1 = _state()
+    mgr.save(1, st1)                     # full
+    st2 = _state(bump_block=4, base=st1)
+    mgr.save(2, st2)                     # delta <- 1
+    st3 = _state(bump_block=6, base=st2)
+    assert mgr.save(3, st3).kind == "full"   # full_every=2 forces a full
+    st4 = _state(bump_block=11, base=st3)
+    mgr.save(4, st4)                     # delta <- 3
+    f3 = next(f for f in os.listdir(tmp_path / "step_00000003")
+              if f.startswith("w.s"))
+    p = tmp_path / "step_00000003" / f3
+    raw = bytearray(p.read_bytes())
+    raw[10] ^= 0xFF
+    p.write_bytes(bytes(raw))
+    restored, _, got, skipped = mgr.restore_latest(like=st1)
+    assert got == 2                      # whole 3<-4 chain invalidated
+    assert [s for s, _ in skipped] == [4, 3]
+    assert _trees_equal(restored, st2)
+
+
+def test_full_every_bounds_chain_depth(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=3, keep=20)
+    st = _state()
+    kinds = []
+    for s in range(1, 8):
+        kinds.append(mgr.save(s, st).kind)
+        st = _state(bump_block=s % 16, base=st)
+    assert kinds == ["full", "delta", "delta",
+                     "full", "delta", "delta", "full"]
+
+
+def test_gc_keeps_parents_of_retained_deltas(tmp_path):
+    """A parent outlives ``keep`` while any retained delta references it;
+    once two fresh fulls displace the chain, the old steps fall away."""
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=100, keep=2)
+    st = _state()
+    mgr.save(1, st)
+    for s in (2, 3, 4, 5):
+        st = _state(bump_block=s, base=st)
+        mgr.save(s, st)
+    # keep=2 retains {4,5}, whose chains reference 1..3 transitively
+    assert mgr.all_steps() == [1, 2, 3, 4, 5]
+    restored, _, got, skipped = mgr.restore_latest(like=st)
+    assert got == 5 and not skipped
+    assert _trees_equal(restored, st)
+    # two consecutive fulls -> nothing references the old chain
+    mgr2 = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                             full_every=1, keep=2)
+    mgr2.save(6, st)
+    mgr2.save(7, st)
+    assert mgr2.all_steps() == [6, 7]
+
+
+def test_zero_dirty_save_writes_no_shard_payload(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=100)
+    st = {"w": jax.random.normal(KEY, (4096,))}
+    mgr.save(1, st)
+    s2 = mgr.save(2, st)                 # identical state
+    assert s2.kind == "delta" and s2.dirty_blocks == 0
+    files = os.listdir(tmp_path / "step_00000002")
+    assert not any(f.startswith("w.s") for f in files)
+    restored, _ = mgr.restore(step=2, like=st)
+    assert _trees_equal(restored, st)
+
+
+def test_delta_survives_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=100)
+    st = _state()
+    mgr.save(1, st, blocking=False)
+    st = _state(bump_block=12, base=st)
+    s2 = mgr.save(2, st, blocking=False)
+    mgr.wait()
+    assert s2.kind == "delta"
+    restored, _, got, _ = mgr.restore_latest(like=st)
+    assert got == 2 and _trees_equal(restored, st)
+
+
+def test_small_and_integer_leaves_always_full(tmp_path):
+    """Leaves under the delta floor and non-float leaves ride along full
+    (and stay bit-exact) even in delta mode."""
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=100)
+    st = {"big": jax.random.normal(KEY, (4096,)),
+          "small": jnp.linspace(-1.0, 1.0, 64),
+          "ints": jnp.arange(5000, dtype=jnp.int32)}
+    mgr.save(1, st)
+    ints = np.asarray(st["ints"]).copy()
+    ints[100] += 1                       # one dirty block of twenty
+    st2 = {**st, "ints": jnp.asarray(ints)}
+    s2 = mgr.save(2, st2)
+    assert s2.kind == "delta"
+    man = _manifest(tmp_path, 2)
+    assert "delta" not in man["arrays"]["small"]["shards"][0]
+    assert man["arrays"]["ints"]["shards"][0]["delta"]["local"] == [0]
+    restored, _ = mgr.restore(step=2, like=st2)
+    assert _trees_equal(restored, st2)
+
+
+def test_delta_block_must_align_with_codec_block(tmp_path):
+    with pytest.raises(ValueError, match="multiple"):
+        CheckpointManager(str(tmp_path), delta=True, delta_block=100)
+
+
+def test_regenerated_parent_step_invalidates_stale_chain(tmp_path):
+    """Walk-back + resume can REGENERATE a parent step number with
+    different content (new training trajectory).  A stale delta left
+    behind by the walk-back must not silently resolve against it — every
+    file's CRC would pass while the assembled state mixes generations.
+    Lineage ids pin each delta to the exact save it referenced."""
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=100, keep=10)
+    st1 = _state()
+    mgr.save(1, st1)                     # full
+    st2 = _state(bump_block=2, base=st1)
+    mgr.save(2, st2)                     # delta <- 1
+    st3 = _state(bump_block=9, base=st2)
+    mgr.save(3, st3)                     # delta <- 1, 2
+    # corrupt step 2 -> walk-back lands on step 1 (stale step 3 remains)
+    f2 = next(f for f in os.listdir(tmp_path / "step_00000002")
+              if f.startswith("w.s"))
+    p = tmp_path / "step_00000002" / f2
+    raw = bytearray(p.read_bytes())
+    raw[-1] ^= 0xFF
+    p.write_bytes(bytes(raw))
+    _, _, got, _ = mgr.restore_latest(like=st1)
+    assert got == 1
+    # resume: a NEW step 2 (full — post-restore) replaces the corrupt one
+    st2b = _state(bump_block=5, base=st1)
+    assert mgr.save(2, st2b).kind == "full"
+    # stale step 3 still references the OLD step 2's lineage: it must be
+    # refused, not silently assembled from the regenerated step 2
+    restored, _, got, skipped = mgr.restore_latest(like=st1)
+    assert got == 2
+    assert [s for s, _ in skipped] == [3]
+    assert "regenerated" in skipped[0][1]
+    assert _trees_equal(restored, st2b)
+
+
+def test_close_releases_uncommitted_staging_registration(tmp_path):
+    """A non-committing host's staging dir stays protected while its
+    manager lives, but must become sweepable after close() — otherwise an
+    abandoned multi-host step leaks for the life of the process."""
+    mgr = CheckpointManager(str(tmp_path), host_id=1, num_hosts=2)
+    st = _state()
+    mgr.save(1, st)                      # host 1 never commits (no ack_h0)
+    staging = tmp_path / f"step_00000001.tmp.{os.getpid()}"
+    assert staging.exists()
+    CheckpointManager(str(tmp_path))     # sweep skips: still registered
+    assert staging.exists()
+    mgr.close()
+    CheckpointManager(str(tmp_path))     # now stale: swept
+    assert not staging.exists()
+
+
+def test_restore_with_inflight_async_save_keeps_next_save_full(tmp_path):
+    """restore() must join an in-flight async writer BEFORE resetting the
+    delta base — otherwise the writer's completion repopulates the base
+    after the reset and the post-rollback save silently becomes a delta
+    referencing pre-rollback steps."""
+    mgr = CheckpointManager(str(tmp_path), delta=True, delta_block=256,
+                            full_every=100)
+    st = _state()
+    mgr.save(1, st)
+    st2 = _state(bump_block=4, base=st)
+    mgr.save(2, st2, blocking=False)     # writer in flight
+    restored, _ = mgr.restore(step=1, like=st)
+    assert mgr._writer is None           # joined, not raced
+    assert _trees_equal(restored, st)
+    assert mgr.save(3, _state(bump_block=1, base=st)).kind == "full"
+
+
+def test_policy_amortizes_delta_and_full_costs():
+    from repro.core.policy import CheckpointPolicy
+    p = CheckpointPolicy(mode="young_daly", ema=0.5)
+    p.observe_checkpoint(8.0, kind="full")
+    for _ in range(7):
+        p.observe_checkpoint(1.0, kind="delta")
+    # count-weighted mean: (8*1 + 1*7) / 8 — the amortized per-save C,
+    # not an EMA whipsawing between 8 and 1
+    assert p.ckpt_cost_s == pytest.approx((8.0 + 7.0) / 8.0)

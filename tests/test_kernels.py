@@ -240,3 +240,89 @@ def test_rmsnorm_sweep(shape, dtype):
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32), atol=2e-2,
                                rtol=2e-2)
+
+
+@pytest.mark.parametrize("shape", [
+    (1000,), (40, 100), (33, 17, 29), (2048,), (65536,), (70000,),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32,
+                                   jnp.int8])
+@pytest.mark.parametrize("block_elems", [256, 1024])
+def test_block_hash_sweep(shape, dtype, block_elems):
+    """Pallas kernel AND jnp twin vs the numpy oracle — bit-exact uint32
+    block hashes across dtypes, odd sizes, and tail blocks."""
+    from repro.kernels.block_hash.ops import block_hashes
+    from repro.kernels.block_hash.ref import block_hashes_np
+
+    if jnp.issubdtype(dtype, jnp.floating):
+        x = jax.random.normal(KEY, shape).astype(dtype)
+    else:
+        n = int(np.prod(shape))
+        x = (jnp.arange(n, dtype=jnp.int32) % 251 - 125).astype(
+            dtype).reshape(shape)
+    ref = block_hashes_np(np.asarray(x), block_elems)
+    ker = np.asarray(block_hashes(x, block_elems, use_kernel=True,
+                                  interpret=True))
+    twin = np.asarray(block_hashes(x, block_elems, use_kernel=False))
+    assert ref.dtype == np.uint32 and ker.dtype == np.uint32
+    assert ref.shape == (-(-int(np.prod(shape)) // block_elems),)
+    np.testing.assert_array_equal(ker, ref)
+    np.testing.assert_array_equal(twin, ref)
+
+
+def test_block_hash_single_bit_flip_changes_exactly_one_hash():
+    from repro.kernels.block_hash.ref import block_hashes_np
+
+    x = np.asarray(jax.random.normal(KEY, (4096,)))
+    base = block_hashes_np(x, 256)
+    # k=31 at an odd word index is the adversarial case for a plain sum's
+    # weighted variant: delta = 2^31 * weight — only an ODD weight keeps
+    # it nonzero mod 2^32
+    for (i, bit) in ((0, 0), (300, 13), (4095, 31), (1, 31)):
+        y = x.copy()
+        w = y.view(np.uint32)
+        w[i] ^= np.uint32(1 << bit)
+        h = block_hashes_np(y, 256)
+        assert (h != base).sum() == 1
+        assert np.nonzero(h != base)[0][0] == i // 256
+
+
+def test_block_hash_detects_permutations_and_compensating_changes():
+    """A plain word sum is permutation-invariant and blind to +d/-d pairs
+    — real state updates a delta save must NOT treat as clean.  The odd
+    position weights break both symmetries."""
+    from repro.kernels.block_hash.ref import block_hashes_np
+
+    x = np.arange(4096, dtype=np.float32)
+    base = block_hashes_np(x, 256)
+    # swap two unequal values inside one block
+    y = x.copy()
+    y[10], y[20] = x[20], x[10]
+    assert not np.array_equal(block_hashes_np(y, 256), base)
+    # compensating integer +d/-d inside one block (sum-preserving)
+    z = np.arange(4096, dtype=np.int32)
+    bz = block_hashes_np(z, 256)
+    z2 = z.copy()
+    z2[100] += 7
+    z2[101] -= 7
+    assert not np.array_equal(block_hashes_np(z2, 256), bz)
+
+
+def test_block_hash_checksum_is_sum_of_block_hashes():
+    """The scrubber's leaf checksum == uint32 sum of the delta-mode block
+    hashes (at the same block size — position weights restart per block)
+    — scrub and delta genuinely share one reduction."""
+    from repro.kernels.block_hash.ops import (BLOCK_ELEMS, block_hashes,
+                                              checksum_words)
+    from repro.kernels.block_hash.ref import checksum_np
+    from repro.sdc.checksum import leaf_checksum
+
+    x = jax.random.normal(KEY, (333, 77))
+    hashes = np.asarray(block_hashes(x, BLOCK_ELEMS))
+    total = int(hashes.sum(dtype=np.uint32))
+    assert total == int(jax.device_get(checksum_words(x)))
+    assert total == checksum_np(np.asarray(x))
+    assert total == leaf_checksum(x)
+    # the identity holds at every (matching) block size
+    h256 = np.asarray(block_hashes(x, 256))
+    assert int(h256.sum(dtype=np.uint32)) == checksum_np(np.asarray(x), 256)

@@ -124,3 +124,40 @@ def test_overhead_metric_eq2():
                                               13441.8312 - 174.9448)
     assert abs(ov - 174.9448 / 13441.8312) < 1e-12
     assert abs(ov - 0.013) < 0.002  # the paper's ~1.4% (1.3015%)
+
+
+def test_observe_checkpoint_kind_weighted_amortized_cost():
+    """Delta checkpointing makes C bimodal (cheap deltas + periodic
+    fulls); with ``kind`` the policy tracks one EMA per kind and C is the
+    count-weighted mean — the amortized per-save cost — instead of an EMA
+    whipsawing between the two modes."""
+    p = CheckpointPolicy(mode="young_daly", ema=0.5)
+    p.observe_checkpoint(10.0, kind="full")
+    for _ in range(4):
+        p.observe_checkpoint(1.0, kind="delta")
+    assert p.ckpt_cost_s == pytest.approx((10.0 + 4.0) / 5.0)
+    # the legacy single-EMA path is untouched
+    q = CheckpointPolicy(mode="young_daly", ema=0.5)
+    q.observe_checkpoint(2.0)
+    q.observe_checkpoint(4.0)
+    assert q.ckpt_cost_s == pytest.approx(3.0)
+
+
+def test_smaller_measured_c_tightens_interval():
+    """The whole point of shrinking C: the adaptive Young/Daly interval
+    tightens automatically when the measured save cost drops (delta saves
+    feed the smaller cost through the same observe path)."""
+    full = CheckpointPolicy(mode="young_daly",
+                            system=SystemModel(node_mtbf_seconds=3600 * 100,
+                                               num_nodes=100))
+    delta = CheckpointPolicy(mode="young_daly",
+                             system=SystemModel(node_mtbf_seconds=3600 * 100,
+                                                num_nodes=100))
+    for _ in range(5):
+        full.observe_step(1.0)
+        delta.observe_step(1.0)
+    full.observe_checkpoint(2.0, kind="full")
+    delta.observe_checkpoint(2.0, kind="full")
+    for _ in range(9):
+        delta.observe_checkpoint(0.1, kind="delta")
+    assert delta.interval_steps() < full.interval_steps()

@@ -115,6 +115,82 @@ def test_scheduler_requeued_requests_keep_fifo_front():
     assert popped[-1] == c.rid           # retried requests go first
 
 
+def test_requeue_clears_first_token_time():
+    """A retried request's pre-failure t_first_token was discarded with
+    its partial output; keeping the stamp would make BENCH_serve's p50/p99
+    understate failover latency.  requeue itself must clear it (every
+    drain path goes through requeue, including the FAILED terminal)."""
+    s = Scheduler(max_retries=1)
+    r = s.submit([1, 2], 4)
+    s.pop_queued()
+    s.start_prefill(r, 0, 0)
+    s.start_decode(r, 7)
+    r.t_first_token = 123.0              # engine stamped the first token
+    s.requeue(r)
+    assert r.t_first_token is None       # retry must restamp
+    s.pop_queued()
+    s.start_prefill(r, 0, 1)
+    r.t_first_token = 456.0
+    s.requeue(r)                         # budget exhausted -> FAILED
+    assert r.state == "FAILED" and r.t_first_token is None
+
+
+def test_reap_evicts_finished_requests():
+    """DONE/FAILED requests must be evictable or scheduler.requests grows
+    without bound under sustained traffic (one leaked Request per served
+    stream)."""
+    s = Scheduler(max_retries=0)
+    done = s.submit([1], 1)
+    s.pop_queued(); s.start_prefill(done, 0, 0); s.start_decode(done, 7)
+    s.finish(done)
+    failed = s.submit([2], 2)
+    s.pop_queued(); s.start_prefill(failed, 0, 0)
+    s.requeue(failed)                    # max_retries=0 -> FAILED
+    flying = s.submit([3], 2)
+    s.pop_queued(); s.start_prefill(flying, 1, 0)
+
+    with pytest.raises(ValueError, match="not finished"):
+        s.reap(flying.rid)               # in-flight: caller bug
+    got = s.reap(done.rid)
+    assert got.tokens == [7]
+    with pytest.raises(KeyError):
+        s.reap(done.rid)                 # double-reap
+    reaped = s.reap_finished()           # drains the FAILED one too
+    assert [r.rid for r in reaped] == [failed.rid]
+    assert set(s.requests) == {flying.rid}   # bounded by in-flight
+
+
+def test_observability_lists_are_capped():
+    from repro.serve.scheduler import OBSERVABILITY_CAP
+    s = Scheduler(max_pending=10**9, max_retries=10**9)
+    r = s.submit([1], 2)
+    s.pop_queued()
+    for _ in range(OBSERVABILITY_CAP + 100):
+        s.start_prefill(r, 0, 0)
+        s.requeue(r)
+        s.pop_queued()
+    assert len(s.retried_rids) == OBSERVABILITY_CAP
+
+
+def test_engine_drain_finished_bounds_request_map(params):
+    prompts = _prompts(4)
+    eng = ServeEngine(CFG, params, num_replicas=1, slots_per_replica=2,
+                      max_len=MAX_LEN, fault_tolerant=False, sentinel=False)
+    rids = [eng.submit(p, 4) for p in prompts]
+    res = eng.run()
+    assert len(eng.scheduler.requests) == len(prompts)
+    drained = eng.drain_finished()
+    assert drained == res                # same rid -> tokens mapping
+    assert eng.scheduler.requests == {}  # record map fully drained
+    # a second wave starts from a clean slate
+    rid2 = eng.submit(prompts[0], 4)
+    res2 = eng.run()
+    assert res2 == {rid2: res[rids[0]]}  # greedy stream reproducible
+    assert eng.reap(rid2) == res2[rid2]
+    assert eng.scheduler.requests == {}
+    eng.shutdown()
+
+
 # ---------------------------------------------------------------------------
 # cache pool slot invariants
 # ---------------------------------------------------------------------------
@@ -369,11 +445,18 @@ def test_e2e_failover_kill_replica_mid_decode(params):
     res = eng.run()
     events = [e["event"] for e in eng.events]
     retried = list(eng.scheduler.retried_rids)
+    fail_t = next(e["t"] for e in eng.events
+                  if e["event"] == "replica_failed")
+    restamped = [eng.scheduler.requests[rid].t_first_token
+                 for rid in set(retried)]
     eng.shutdown()
 
     assert inj.replica_kills and inj.replica_kills[0][1] == 1
     assert "replica_failed" in events
     assert retried, "the kill must have drained in-flight requests"
+    # requeue cleared the pre-failure stamp; the retry restamped it AFTER
+    # the failure — TTFT percentiles now include the failover latency
+    assert all(t is not None and t > fail_t for t in restamped)
     assert eng.scheduler.failed_rids == []          # zero dropped
     assert len(res) == len(prompts)                 # zero dropped
     for rid, r in zip(rids, ref):
