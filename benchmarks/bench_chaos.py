@@ -1,0 +1,103 @@
+"""Chaos-engine benchmark: replay the scenario library at cluster scale.
+
+Every trace in ``scenarios/*.json`` runs through the control-plane
+simulator (``repro.chaos.sim``) at 1000 virtual hosts — the scale the
+acceptance bar names — and the compound trace additionally sweeps fleet
+sizes.  Reported per trace (docs/chaos.md):
+
+  - wall time and us/host-tick (the simulator must stay cheap enough to
+    sweep: 1000 hosts x a full trace well under a minute);
+  - failure-detection latency p50/p99 (kill -> monitor declares dead) —
+    the recovery-latency distribution of the control plane itself;
+  - stale-datagram rejections (every one delivered must be rejected);
+  - invariant pass rates (no-dead-growth, monotonic-drain, conservation,
+    Young/Daly cadence vs the closed form).
+
+Emits machine-readable ``BENCH_chaos.json``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Dict, List
+
+SCENARIO_DIR = os.path.join(os.path.dirname(__file__), "..", "scenarios")
+NUM_HOSTS = 1000
+
+
+def write_json(results: Dict[str, float],
+               path: str = "BENCH_chaos.json") -> str:
+    path = os.environ.get("BENCH_CHAOS_JSON", path)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    return path
+
+
+def main() -> List[str]:
+    from repro.chaos import ControlPlaneSim, Scenario
+
+    rows: List[str] = []
+    results: Dict[str, float] = {}
+    paths = sorted(glob.glob(os.path.join(SCENARIO_DIR, "*.json")))
+    if not paths:
+        raise FileNotFoundError(f"no scenario traces in {SCENARIO_DIR}")
+
+    total_wall = 0.0
+    for path in paths:
+        sc = Scenario.from_json(path)
+        sim = ControlPlaneSim(NUM_HOSTS, base_rate=20, slots_per_host=4)
+        t0 = time.perf_counter()
+        rep = sim.run(sc)
+        wall = time.perf_counter() - t0
+        total_wall += wall
+        d = rep.to_dict()
+        host_ticks = NUM_HOSTS * rep.ticks
+        us_tick = wall / host_ticks * 1e6
+        print(f"{sc.name:16s} {NUM_HOSTS} hosts x {rep.ticks} ticks: "
+              f"{wall * 1e3:6.1f} ms ({us_tick:.2f} us/host-tick)  "
+              f"detected={d['detected']} "
+              f"latency p50={d['detection_latency_p50']:.2f}s "
+              f"p99={d['detection_latency_p99']:.2f}s  "
+              f"stale {d['stale_rejected']}/{d['stale_delivered']} rejected"
+              f"  invariants {d['invariant_pass_rate']:.0%}")
+        rows.append(f"chaos_sim_{sc.name},{us_tick:.3f},"
+                    f"detected={d['detected']}")
+        for k in ("detected", "detection_latency_p50",
+                  "detection_latency_p99", "grow_events", "stale_delivered",
+                  "stale_rejected", "drained", "completed",
+                  "invariant_pass_rate"):
+            results[f"{sc.name}.{k}"] = float(d[k])
+        results[f"{sc.name}.us_per_host_tick"] = round(us_tick, 3)
+        if d["invariant_pass_rate"] < 1.0:
+            raise AssertionError(
+                f"{sc.name}: invariants failed: {d['invariants']}")
+
+    # fleet-size sweep on the compound trace: detection latency must stay
+    # flat (timeout-bound) while the Young/Daly interval shrinks ~1/sqrt(n)
+    compound = Scenario.from_json(os.path.join(SCENARIO_DIR,
+                                               "compound.json"))
+    for n in (100, 1000, 4000):
+        sim = ControlPlaneSim(n)
+        t0 = time.perf_counter()
+        rep = sim.run(compound)
+        wall = time.perf_counter() - t0
+        interval = rep.cadence[-1]["interval"]
+        print(f"compound @ {n:5d} hosts: {wall * 1e3:6.1f} ms, "
+              f"young/daly interval={interval} steps, "
+              f"cadence_ok={rep.cadence_ok}")
+        rows.append(f"chaos_sweep_{n},{wall / max(n * rep.ticks, 1) * 1e6:.3f},"
+                    f"yd_interval={interval}")
+        results[f"sweep.{n}.yd_interval"] = float(interval)
+        results[f"sweep.{n}.wall_ms"] = round(wall * 1e3, 2)
+    print(f"library total: {len(paths)} traces x {NUM_HOSTS} hosts in "
+          f"{total_wall:.2f}s")
+    results["library.total_seconds"] = round(total_wall, 3)
+    path = write_json(results)
+    print(f"(machine-readable results: {path})")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -79,7 +79,8 @@ def main() -> List[str]:
     results["ttft_p50_ms"] = statistics.median(ttft) * 1e3
 
     # ---- failover: kill 1 of 2 replicas mid-decode ----
-    inj = FaultInjector().schedule_replica_kill(4, replica_id=1)
+    inj = FaultInjector()
+    inj.schedule_replica_kill(4, replica_id=1)
     eng = ServeEngine(cfg, params, num_replicas=2, slots_per_replica=2,
                       max_len=prompt_len + gen, fault_tolerant=True,
                       heartbeat_period=0.05, heartbeat_timeout_factor=40.0,

@@ -2,30 +2,43 @@
 # CSV rows after each section's human-readable report, and persists the
 # checkpoint suite's rows to BENCH_checkpoint.json (name -> us_per_call)
 # so the perf trajectory is tracked across PRs.
+#
+# ``--only NAME`` runs a single suite by its short name (e.g.
+# ``python benchmarks/run.py --only chaos``).
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import traceback
 
 
 def main() -> None:
-    sections = []
-    from benchmarks import (bench_checkpoint, bench_heartbeat, bench_kernels,
-                            bench_overhead_fwi, bench_sdc, bench_serve,
-                            bench_throughput)
+    from benchmarks import (bench_chaos, bench_checkpoint, bench_heartbeat,
+                            bench_kernels, bench_overhead_fwi, bench_sdc,
+                            bench_serve, bench_throughput)
     suites = [
-        ("overhead_fwi (paper Fig.1-2, eq.2-3)", bench_overhead_fwi.main),
-        ("checkpoint cost + Young/Daly (eq.1)", bench_checkpoint.main),
-        ("heartbeat detection", bench_heartbeat.main),
-        ("kernels vs oracles", bench_kernels.main),
-        ("SDC guard overhead (docs/sdc.md)", bench_sdc.main),
-        ("train-loop throughput", bench_throughput.main),
-        ("serving engine (docs/serving.md)", bench_serve.main),
+        ("overhead_fwi", "overhead_fwi (paper Fig.1-2, eq.2-3)",
+         bench_overhead_fwi.main),
+        ("checkpoint", "checkpoint cost + Young/Daly (eq.1)",
+         bench_checkpoint.main),
+        ("heartbeat", "heartbeat detection", bench_heartbeat.main),
+        ("kernels", "kernels vs oracles", bench_kernels.main),
+        ("sdc", "SDC guard overhead (docs/sdc.md)", bench_sdc.main),
+        ("throughput", "train-loop throughput", bench_throughput.main),
+        ("serve", "serving engine (docs/serving.md)", bench_serve.main),
+        ("chaos", "chaos scenario replay (docs/chaos.md)",
+         bench_chaos.main),
     ]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=[s[0] for s in suites],
+                    help="run a single suite by short name")
+    args = ap.parse_args()
+    if args.only:
+        suites = [s for s in suites if s[0] == args.only]
     all_rows = []
     failed = 0
-    for name, fn in suites:
+    for _, name, fn in suites:
         print(f"\n=== {name} ===", flush=True)
         try:
             rows = fn()
@@ -38,7 +51,8 @@ def main() -> None:
         print(r)
     for env, default in (("BENCH_CHECKPOINT_JSON", "BENCH_checkpoint.json"),
                          ("BENCH_SDC_JSON", "BENCH_sdc.json"),
-                         ("BENCH_SERVE_JSON", "BENCH_serve.json")):
+                         ("BENCH_SERVE_JSON", "BENCH_serve.json"),
+                         ("BENCH_CHAOS_JSON", "BENCH_chaos.json")):
         json_path = os.environ.get(env, default)
         if os.path.exists(json_path):  # written by the owning bench module
             print(f"(machine-readable results: {json_path})")

@@ -35,8 +35,10 @@ def main():
             dep = Dependability(DependabilityConfig(
                 checkpoint_dir=d, policy_mode="every_n", every_n=1,
                 async_save=True)).start()
-            injector = (FaultInjector().schedule_failstop(6)
-                        if survey == "baseline" else None)
+            injector = None
+            if survey == "baseline":
+                injector = FaultInjector()
+                injector.schedule_failstop(6)
             t0 = time.perf_counter()
             state, hist = run_fwi(cfg, data[survey], dep=dep,
                                   fault_injector=injector,

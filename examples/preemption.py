@@ -2,17 +2,18 @@
 
     PYTHONPATH=src python examples/preemption.py
 
-Phase 1 trains until a (self-sent) SIGUSR1 arrives — the scheduler's
-"you're about to be preempted" warning.  DeLIA latches the signal, takes a
-final checkpoint at the superstep boundary and exits cleanly.  Phase 2
-relaunches and resumes exactly where phase 1 stopped.
+Phase 1 trains until a SIGUSR1 arrives — the scheduler's "you're about to
+be preempted" warning, replayed here from a chaos ``Scenario`` trace
+(``preempt(at=9)`` compiled by ``TrainScenarioDriver``; see
+docs/chaos.md).  DeLIA latches the signal, takes a final checkpoint at
+the superstep boundary and exits cleanly.  Phase 2 relaunches and resumes
+exactly where phase 1 stopped.
 """
-import os
-import signal
 import tempfile
 
 import jax
 
+from repro.chaos import Scenario, TrainScenarioDriver
 from repro.core import Dependability, DependabilityConfig, run_bsp
 from repro.data import make_pipeline
 from repro.models import get_config
@@ -23,6 +24,10 @@ def main():
     cfg = get_config("gemma-7b", tiny=True)
     steps = 30
     step_fn = jax.jit(make_train_step(cfg, total_steps=steps))
+
+    # the failure timeline as a declarative trace: the scheduler preempts
+    # us at step 9 (the same JSON-able schema scenarios/*.json uses)
+    scenario = Scenario("preempt-at-9").preempt(at=9)
 
     with tempfile.TemporaryDirectory() as ckpt_dir:
         def make_dep():
@@ -37,15 +42,12 @@ def main():
         dep.register_local_state(data)
         state = init_state(cfg, jax.random.PRNGKey(0))
 
-        def maybe_preempt(step, rec):
-            if step == 9:
-                print(">>> scheduler sends SIGUSR1 (preemption warning)")
-                os.kill(os.getpid(), signal.SIGUSR1)
-
+        driver = TrainScenarioDriver(scenario, settle_seconds=0)
         state, status, _ = run_bsp(dep, step_fn, state, data, steps,
-                                   on_metrics=maybe_preempt)
+                                   on_metrics=driver.on_metrics)
         print(f"phase 1: {status} (cause={dep.interruption_cause()}); "
-              f"checkpoint at step {dep.manager.latest_step()}")
+              f"checkpoint at step {dep.manager.latest_step()}; "
+              f"actions applied: {driver.report()['applied']}")
         dep.stop()
 
         # ---- phase 2: relaunch, resume ----

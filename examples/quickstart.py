@@ -33,7 +33,8 @@ def main():
         dep.register_local_state(data)            # DeLIA local state
         state = init_state(cfg, jax.random.PRNGKey(0))
 
-        injector = FaultInjector().schedule_failstop(12)
+        injector = FaultInjector()
+        injector.schedule_failstop(12)
 
         def log(step, rec):
             print(f"step {step:3d}  loss={rec['loss']:.4f}  "

@@ -18,6 +18,9 @@ test -f tests/test_serve.py
 # and the delta-checkpoint suite (tests/test_delta.py chain/GC/bit-exact
 # coverage + block_hash kernel sweeps in tests/test_kernels.py)
 test -f tests/test_delta.py
+# and the chaos scenario suite (tests/test_chaos.py: schema/driver/sim
+# units + the compound-trace E2Es, which carry the `slow` marker)
+test -f tests/test_chaos.py
 ARGS=()
 for a in "$@"; do
   if [ "$a" = "--fast" ]; then

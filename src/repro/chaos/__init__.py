@@ -1,0 +1,34 @@
+"""Chaos scenario engine: trace-driven correlated-failure injection and a
+cluster-scale control-plane simulator (docs/chaos.md).
+
+One declarative ``Scenario`` (timed kills, partitions, SDC storms,
+stragglers, traffic spikes, rejoins) replays against three planes with the
+same semantics: the elastic training loop (``run_scenario_elastic``), the
+serving engine (``ServeScenarioDriver``), and a device-free simulator that
+validates the control-plane protocol at thousands of virtual hosts
+(``ControlPlaneSim``).  ``invariants`` holds the standing post-run checks
+every plane is audited against.
+"""
+from repro.chaos.driver import (ServeScenarioDriver, TrainScenarioDriver,
+                                run_scenario_elastic)
+from repro.chaos.invariants import (InvariantResult, InvariantViolation,
+                                    check_conservation,
+                                    check_monotonic_drain,
+                                    check_no_dead_growth,
+                                    check_no_lost_steps,
+                                    check_token_identical,
+                                    check_trajectory_match, check_zero_drop,
+                                    pass_rate, summarize, verify)
+from repro.chaos.scenario import (ChaosEvent, Scenario, ScenarioError,
+                                  KINDS, WINDOW_KINDS)
+from repro.chaos.sim import ControlPlaneSim, SimReport
+
+__all__ = [
+    "ChaosEvent", "ControlPlaneSim", "InvariantResult",
+    "InvariantViolation", "KINDS", "Scenario", "ScenarioError",
+    "ServeScenarioDriver", "SimReport", "TrainScenarioDriver",
+    "WINDOW_KINDS", "check_conservation", "check_monotonic_drain",
+    "check_no_dead_growth", "check_no_lost_steps", "check_token_identical",
+    "check_trajectory_match", "check_zero_drop", "pass_rate",
+    "run_scenario_elastic", "summarize", "verify",
+]

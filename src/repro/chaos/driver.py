@@ -1,0 +1,498 @@
+"""Scenario drivers: compile a ``Scenario`` onto the live fault-injection
+hooks and drive the training and serving loops through it.
+
+Two adapters share one trace format (``repro.chaos.scenario``):
+
+- ``TrainScenarioDriver`` + ``run_scenario_elastic`` replay a scenario
+  against ``core.elastic_loop.run_elastic``: kills pause heartbeat
+  emitters (the monitor detects, the mesh shrinks), rejoins resume them
+  (grow), partitions drop emitter datagrams via the heartbeat layer's
+  ``send_filter`` network gate (asymmetric liveness — the partitioned
+  host keeps running and believes it is connected), SDC storms compile to
+  seeded ``schedule_bitflip`` schedules, straggles to
+  ``schedule_straggle``, and ``preempt`` to the termination signal.
+  ``run_scenario_elastic`` additionally closes the corruption loop the
+  elastic runner alone leaves open: a storm flip detected by a scrub /
+  sentinel tier raises ``CorruptionDetected`` out of ``run_elastic``; the
+  wrapper rolls back to the newest verified checkpoint and re-enters on
+  the surviving hosts (``initial_hosts``) — compound scenarios where a
+  rack dies *during* an SDC storm recover end to end.
+
+- ``ServeScenarioDriver`` replays the same trace against a running
+  ``ServeEngine``: kills become ``schedule_replica_kill`` (several ids at
+  one step = a correlated rack loss), SDC storms become
+  ``schedule_replica_sdc`` (the sentinel drain path), straggles become
+  latency spikes, partitions gate replica emitters, and traffic spikes
+  multiply the driver's own request arrivals (flash crowd).  The driver
+  records conservation samples every engine step so
+  ``invariants.check_conservation`` / ``check_monotonic_drain`` audit the
+  whole run.
+
+Event kinds outside a plane (``traffic_spike`` for training, ``preempt``
+for serving) are recorded in the driver's ``skipped`` report, never
+silently lost.  All event clocks here are ``clock="step"``; virtual-time
+scenarios belong to the simulator (``repro.chaos.sim``).
+"""
+from __future__ import annotations
+
+import os
+import random
+import signal as signal_module
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.chaos.scenario import Scenario, ScenarioError
+from repro.core.failures import CorruptionDetected, FaultInjector
+
+
+def _storm_flips(scenario: Scenario, event, leaf_names: Sequence[str]
+                 ) -> List[Tuple[int, str, int]]:
+    """Deterministic (step, leaf, bit) schedule for one sdc_storm event —
+    seeded by (scenario.seed, event id), so replays and both planes agree."""
+    leaves = event.args["leaves"] or list(leaf_names)
+    if not leaves:
+        raise ScenarioError(
+            "sdc_storm: no target leaves — the event names none and the "
+            "driver was given no leaf_names")
+    rng = random.Random(f"{scenario.seed}/storm/{event.eid}")
+    flips = []
+    for step in range(int(event.at), int(event.until)):
+        if rng.random() < event.args["rate"]:
+            flips.append((step, rng.choice(list(leaves)),
+                          rng.randrange(event.args["max_bit"])))
+    return flips
+
+
+class TrainScenarioDriver:
+    """Compile a Scenario for the elastic training loop.
+
+    - ``emitters``: host id -> ``HeartbeatEmitter`` (include host 0's own
+      ``dep.emitter`` if the scenario may touch it).
+    - ``leaf_names``: dotted state-leaf names sdc_storm flips pick from
+      when the event doesn't name its own.
+    - ``step_seconds``: the expected superstep duration straggle factors
+      convert against.
+    - ``settle_seconds``: wall-time slept after pausing/gating emitters so
+      the monitor's timeout fires before the next superstep boundary.
+
+    Wire ``on_metrics`` into ``run_bsp``/``run_elastic``; injector-borne
+    events (flips, straggles) are scheduled at construction.  Actions fire
+    once: a rollback replaying earlier steps does not re-kill a host.
+    """
+
+    def __init__(self, scenario: Scenario, *,
+                 injector: Optional[FaultInjector] = None,
+                 emitters: Optional[Dict[int, Any]] = None,
+                 monitor_host: int = 0,
+                 leaf_names: Sequence[str] = (),
+                 step_seconds: float = 0.05,
+                 settle_seconds: float = 0.35):
+        if scenario.clock != "step":
+            raise ScenarioError(
+                f"training driver needs clock='step', scenario "
+                f"{scenario.name!r} uses {scenario.clock!r}")
+        scenario.validate()
+        self.scenario = scenario
+        self.injector = injector if injector is not None else FaultInjector()
+        self.emitters = dict(emitters or {})
+        self.monitor_host = monitor_host
+        self.settle_seconds = settle_seconds
+        self.skipped: List[str] = []
+        self.applied: List[Dict] = []          # chronological action log
+        self._records: Dict[int, Dict] = {}    # step -> newest metrics rec
+        self._fired: set = set()               # (eid, phase) already fired
+        # (step, eid, phase, fn) boundary actions, step-ordered
+        self._actions: List[Tuple[int, int, str, Callable[[], None]]] = []
+        self._compile(leaf_names, step_seconds)
+        self._actions.sort(key=lambda a: (a[0], a[1]))
+
+    # ------------------------------------------------------------------
+    # compilation
+    # ------------------------------------------------------------------
+    def _emitter(self, host: int):
+        if host not in self.emitters:
+            raise ScenarioError(
+                f"scenario {self.scenario.name!r} touches host {host} but "
+                f"no emitter was provided (have {sorted(self.emitters)})")
+        return self.emitters[host]
+
+    def _compile(self, leaf_names, step_seconds) -> None:
+        for ev in self.scenario.sorted_events():
+            if ev.kind == "kill_hosts":
+                for h in ev.args["hosts"]:
+                    self._emitter(h)           # fail fast on bad ids
+                self._actions.append((int(ev.at), ev.eid, "kill",
+                                      self._make_kill(ev)))
+            elif ev.kind == "rejoin":
+                self._emitter(ev.args["host"])
+                self._actions.append((int(ev.at), ev.eid, "rejoin",
+                                      self._make_rejoin(ev)))
+            elif ev.kind == "partition":
+                for g in ev.args["groups"]:
+                    for h in g:
+                        self._emitter(h)
+                self._actions.append((int(ev.at), ev.eid, "partition",
+                                      self._make_partition(ev)))
+                self._actions.append((int(ev.until), ev.eid, "heal",
+                                      self._make_heal(ev)))
+            elif ev.kind == "preempt":
+                self._actions.append((int(ev.at), ev.eid, "preempt",
+                                      self._make_preempt(ev)))
+            elif ev.kind == "sdc_storm":
+                for step, leaf, bit in _storm_flips(self.scenario, ev,
+                                                    leaf_names):
+                    self.injector.schedule_bitflip(step, leaf, bit)
+            elif ev.kind == "straggle":
+                extra = (ev.args["factor"] - 1.0) * step_seconds
+                for step in range(int(ev.at), int(ev.until)):
+                    self.injector.schedule_straggle(step, extra)
+            else:
+                self.skipped.append(ev.kind)
+
+    def _gated_hosts(self, ev) -> List[int]:
+        """Hosts whose datagrams the partition drops: every group not
+        containing the monitor host (the monitor's own side keeps
+        delivering)."""
+        groups = ev.args["groups"]
+        keep = next((g for g in groups if self.monitor_host in g),
+                    groups[0])
+        return [h for g in groups if g is not keep for h in g]
+
+    def _make_kill(self, ev):
+        def fire():
+            for h in ev.args["hosts"]:
+                self._emitter(h).pause()
+            time.sleep(self.settle_seconds)
+        return fire
+
+    def _make_rejoin(self, ev):
+        def fire():
+            self._emitter(ev.args["host"]).resume()
+            time.sleep(self.settle_seconds)
+        return fire
+
+    def _make_partition(self, ev):
+        def fire():
+            for h in self._gated_hosts(ev):
+                self._emitter(h).send_filter = lambda payload: False
+            time.sleep(self.settle_seconds)
+        return fire
+
+    def _make_heal(self, ev):
+        def fire():
+            for h in self._gated_hosts(ev):
+                self._emitter(h).send_filter = None
+            time.sleep(self.settle_seconds)
+        return fire
+
+    def _make_preempt(self, ev):
+        def fire():
+            os.kill(os.getpid(),
+                    getattr(signal_module, ev.args["sig"]))
+        return fire
+
+    # ------------------------------------------------------------------
+    # runtime
+    # ------------------------------------------------------------------
+    def on_metrics(self, step: int, rec: Dict) -> None:
+        """Chain into the BSP loop's ``on_metrics``: fires every due
+        boundary action exactly once and keeps the newest metrics record
+        per step (a replay after rollback overwrites the corrupted-era
+        record, so the merged trajectory is the one that survived)."""
+        self._records[step] = rec
+        for at, eid, phase, fire in self._actions:
+            if at > step:
+                break
+            key = (eid, phase)
+            if key in self._fired:
+                continue
+            self._fired.add(key)
+            self.applied.append({"step": step, "at": at, "phase": phase,
+                                 "event": eid})
+            fire()
+
+    def history(self) -> List[Dict]:
+        """Merged per-step metrics records, step-ordered (newest record
+        wins for steps replayed after a rollback)."""
+        return [self._records[s] for s in sorted(self._records)]
+
+    def dead_intervals(self) -> Dict[int, List[Tuple[float, float]]]:
+        """host -> [(t_kill, t_rejoin_or_inf)] from the scenario timeline
+        (for ``invariants.check_no_dead_growth``)."""
+        out: Dict[int, List[Tuple[float, float]]] = {}
+        open_at: Dict[int, float] = {}
+        for ev in self.scenario.sorted_events():
+            if ev.kind == "kill_hosts":
+                for h in ev.args["hosts"]:
+                    open_at[h] = ev.at
+            elif ev.kind == "rejoin":
+                h = ev.args["host"]
+                if h in open_at:
+                    out.setdefault(h, []).append((open_at.pop(h), ev.at))
+        for h, t0 in open_at.items():
+            out.setdefault(h, []).append((t0, float("inf")))
+        return out
+
+    def report(self) -> Dict:
+        return {"scenario": self.scenario.name,
+                "applied": list(self.applied),
+                "skipped": sorted(set(self.skipped)),
+                "pending_injections": len(self.injector.pending()),
+                "sdc_injected": list(self.injector.sdc_injected)}
+
+
+def run_scenario_elastic(dep, make_step, state, data, num_steps, *,
+                         scenario: Scenario,
+                         emitters: Dict[int, Any],
+                         host_devices: Dict[int, Sequence[Any]],
+                         model_axis: int = 1,
+                         like=None,
+                         shardings_fn: Optional[Callable] = None,
+                         leaf_names: Sequence[str] = (),
+                         step_seconds: float = 0.05,
+                         settle_seconds: Optional[float] = None,
+                         max_rollbacks: int = 4,
+                         on_metrics: Optional[Callable] = None,
+                         on_event: Optional[Callable] = None,
+                         **kw) -> Tuple[Any, Dict]:
+    """Drive ``run_elastic`` through ``scenario``, surviving detected
+    corruption by rolling back to the newest verified checkpoint and
+    re-entering on the surviving hosts.
+
+    Returns ``(state, info)``: ``info["history"]`` is the merged per-step
+    trajectory (loss records, deduplicated across replays),
+    ``info["events"]`` every ``MeshEvent`` across re-entries,
+    ``info["rollbacks"]`` the corruption-recovery count, and
+    ``info["report"]`` the driver's applied/skipped action log.
+    """
+    from repro.core.elastic_loop import run_elastic
+
+    if settle_seconds is None:
+        settle_seconds = 7.0 * dep.config.heartbeat_period
+    driver = TrainScenarioDriver(
+        scenario, emitters=emitters, leaf_names=leaf_names,
+        step_seconds=step_seconds, settle_seconds=settle_seconds)
+
+    def chained_metrics(step, rec):
+        driver.on_metrics(step, rec)
+        if on_metrics is not None:
+            on_metrics(step, rec)
+
+    events: List[Any] = []
+    alive = sorted(host_devices)
+
+    def chained_event(ev):
+        events.append(ev)
+        nonlocal alive
+        if ev.kind == "shrink":
+            alive = [h for h in alive if h not in ev.hosts]
+        else:
+            alive = sorted(set(alive) | set(ev.hosts))
+        if on_event is not None:
+            on_event(ev)
+
+    rollbacks = 0
+    extra_history: List[Dict] = []
+    while True:
+        try:
+            state, info = run_elastic(
+                dep, make_step, state, data, num_steps,
+                host_devices=host_devices, initial_hosts=alive,
+                model_axis=model_axis, like=like, shardings_fn=shardings_fn,
+                fault_injector=driver.injector, on_metrics=chained_metrics,
+                on_event=chained_event, **kw)
+            break
+        except CorruptionDetected as e:
+            rollbacks += 1
+            extra_history.append({
+                "step": e.step, "event": f"corruption:{e.kind}:{e.detail}"})
+            if rollbacks > max_rollbacks:
+                raise
+            dep.manager.wait()
+            state, got = dep.restore_latest(like=like)
+            extra_history.append({"step": got, "event": f"rollback:{got}"})
+            dep.reset_sdc()
+    merged = driver.history() + extra_history
+    merged.extend(h for h in info["history"] if "event" in h)
+    info = dict(info, events=events, rollbacks=rollbacks,
+                history=sorted(merged, key=lambda h: h["step"]),
+                report=driver.report())
+    return state, info
+
+
+class ServeScenarioDriver:
+    """Replay a Scenario against a live ``ServeEngine``.
+
+    The driver owns the workload: ``base_rate`` requests are submitted per
+    engine step (deterministic prompts from ``scenario.seed``), multiplied
+    by any active ``traffic_spike``.  ``QueueFull`` rejections are counted
+    (admission control working as designed), never raised to the caller.
+
+    Construction compiles injector-borne events (kills, SDC storms,
+    straggle latency spikes) onto the engine's ``FaultInjector``;
+    ``step``/``run`` fire partition gates at engine-step boundaries and
+    record one conservation sample per step for the invariant checks.
+    """
+
+    def __init__(self, engine, scenario: Scenario, *,
+                 base_rate: int = 1,
+                 prompt_len: int = 8,
+                 max_new_tokens: int = 8,
+                 step_seconds: float = 0.02,
+                 settle_seconds: Optional[float] = None):
+        if scenario.clock != "step":
+            raise ScenarioError(
+                f"serve driver needs clock='step', scenario "
+                f"{scenario.name!r} uses {scenario.clock!r}")
+        scenario.validate()
+        self.engine = engine
+        self.scenario = scenario
+        self.base_rate = int(base_rate)
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.settle_seconds = settle_seconds
+        if engine.injector is None:
+            engine.injector = FaultInjector()
+        self.injector = engine.injector
+        self.skipped: List[str] = []
+        self.rejected = 0
+        self.submitted_rids: List[int] = []
+        self.prompts: Dict[int, List[int]] = {}   # rid -> prompt
+        self.samples: List[Dict[str, int]] = []
+        self.drained_series: List[int] = []
+        self._gates_on: set = set()
+        self._prompt_rng = random.Random(f"{scenario.seed}/prompts")
+        self._compile(step_seconds)
+
+    # ------------------------------------------------------------------
+    # compilation
+    # ------------------------------------------------------------------
+    def _compile(self, step_seconds: float) -> None:
+        replica_ids = sorted(self.engine.router.replicas)
+        rng = random.Random(f"{self.scenario.seed}/serve")
+        for ev in self.scenario.sorted_events():
+            if ev.kind == "kill_hosts":
+                for rid in ev.args["hosts"]:
+                    self.injector.schedule_replica_kill(int(ev.at), rid)
+            elif ev.kind == "sdc_storm":
+                # the storm strikes replicas here: rate per engine step,
+                # victim drawn from the replicas present at compile time
+                for step in range(int(ev.at), int(ev.until)):
+                    if rng.random() < ev.args["rate"]:
+                        self.injector.schedule_replica_sdc(
+                            step, rng.choice(replica_ids),
+                            detail=f"storm:{self.scenario.name}")
+            elif ev.kind == "straggle":
+                extra = (ev.args["factor"] - 1.0) * step_seconds
+                for step in range(int(ev.at), int(ev.until)):
+                    self.injector.schedule_latency_spike(
+                        step, extra, replica_id=ev.args["host"])
+            elif ev.kind in ("partition", "traffic_spike"):
+                pass                       # fired/queried at step time
+            else:
+                self.skipped.append(ev.kind)
+
+    # ------------------------------------------------------------------
+    # workload
+    # ------------------------------------------------------------------
+    def _make_prompt(self) -> List[int]:
+        vocab = self.engine.cfg.vocab_size
+        return [self._prompt_rng.randrange(vocab)
+                for _ in range(self.prompt_len)]
+
+    def arrival_rate(self, step: int) -> int:
+        """Requests to submit at ``step``: base rate x any active spike.
+        The workload lasts through the scenario horizon — past it arrivals
+        stop, so ``run`` can drain to completion."""
+        if step > self.scenario.horizon:
+            return 0
+        mult = 1.0
+        for ev in self.scenario.active(step, "traffic_spike"):
+            mult = max(mult, ev.args["mult"])
+        return int(round(self.base_rate * mult))
+
+    def _fire_partitions(self, step: int) -> None:
+        for ev in self.scenario.window_events("partition"):
+            on = ev.active(step)
+            if on and ev.eid not in self._gates_on:
+                self._gates_on.add(ev.eid)
+                for rid in self._partitioned(ev):
+                    rep = self.engine.router.replicas.get(rid)
+                    if rep is not None and rep.emitter is not None:
+                        rep.emitter.send_filter = lambda payload: False
+                # let the monitor's timeout land inside the window
+                time.sleep(self._settle())
+            elif not on and ev.eid in self._gates_on and step >= ev.until:
+                self._gates_on.discard(ev.eid)
+                for rid in self._partitioned(ev):
+                    rep = self.engine.router.replicas.get(rid)
+                    if rep is not None and rep.emitter is not None:
+                        rep.emitter.send_filter = None
+
+    def _partitioned(self, ev) -> List[int]:
+        """Replicas the partition cuts off from the monitor: every group
+        but the first (the monitor's side)."""
+        return [r for g in ev.args["groups"][1:] for r in g]
+
+    def _settle(self) -> float:
+        if self.settle_seconds is not None:
+            return self.settle_seconds
+        mon = self.engine.monitor
+        return (1.5 * mon.timeout) if mon is not None else 0.0
+
+    # ------------------------------------------------------------------
+    # the loop
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        from repro.serve.scheduler import QueueFull
+
+        estep = self.engine.engine_step
+        self._fire_partitions(estep)
+        for _ in range(self.arrival_rate(estep)):
+            prompt = self._make_prompt()
+            try:
+                rid = self.engine.submit(prompt, self.max_new_tokens)
+            except QueueFull:
+                self.rejected += 1
+                continue
+            self.submitted_rids.append(rid)
+            self.prompts[rid] = prompt
+        self.engine.step()
+        self._sample()
+
+    def _sample(self) -> None:
+        sched = self.engine.scheduler
+        terminal = sum(1 for r in sched.requests.values()
+                       if r.state in ("DONE", "FAILED"))
+        self.samples.append({
+            "submitted": sched._next_rid,
+            "completed": terminal,
+            "queued": sched.pending(),
+            "in_flight": len(sched.in_flight()),
+        })
+        self.drained_series.append(len(sched.retried_rids))
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
+        """Step until the scenario horizon has passed AND every request is
+        done; returns rid -> tokens.  ``max_steps`` guards liveness."""
+        if max_steps is None:
+            max_steps = int(4 * self.scenario.horizon + 200
+                            + 8 * self.max_new_tokens
+                            * max(self.base_rate, 1))
+        start = self.engine.engine_step
+        while (self.engine.engine_step <= self.scenario.horizon
+               or not self.engine.scheduler.all_done()):
+            if self.engine.engine_step - start > max_steps:
+                raise RuntimeError(
+                    f"scenario {self.scenario.name!r} did not drain after "
+                    f"{max_steps} engine steps")
+            self.step()
+        return self.engine.results()
+
+    def report(self) -> Dict:
+        return {"scenario": self.scenario.name,
+                "submitted": len(self.submitted_rids),
+                "rejected": self.rejected,
+                "retried": len(set(self.engine.scheduler.retried_rids)),
+                "skipped": sorted(set(self.skipped)),
+                "pending_injections": len(self.injector.pending())}

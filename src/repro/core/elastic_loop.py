@@ -82,6 +82,7 @@ class _HostLatch:
 def run_elastic(dep: Dependability, make_step: Callable, state, data,
                 num_steps: int, *,
                 host_devices: Dict[int, Sequence[Any]],
+                initial_hosts: Optional[Sequence[int]] = None,
                 model_axis: int = 1,
                 like=None,
                 shardings_fn: Optional[Callable] = None,
@@ -104,6 +105,12 @@ def run_elastic(dep: Dependability, make_step: Callable, state, data,
       assignment follows the mesh's DP width, and when it is a local-scope
       provider (``shard_state_dicts``) its per-shard cursors ride in the
       checkpoint and remap across widths.
+    - ``initial_hosts``: the hosts believed alive at entry (default: all
+      of ``host_devices``).  A re-entry after an out-of-loop rollback
+      (e.g. the chaos driver recovering from detected corruption) passes
+      the survivor set so the first mesh excludes already-dead hosts;
+      those hosts can still rejoin later — membership in ``host_devices``
+      is what makes a host eligible for grow events.
 
     Returns ``(state, info)`` with ``info["events"]`` the MeshEvent list
     and ``info["history"]`` the merged superstep history.  Raises
@@ -128,10 +135,16 @@ def run_elastic(dep: Dependability, make_step: Callable, state, data,
         pending = rejoin_latch.pending()
         return f"rejoin:{','.join(map(str, pending))}" if pending else None
 
+    if initial_hosts is not None:
+        bad = sorted(set(initial_hosts) - set(host_devices))
+        if bad:
+            raise ValueError(f"initial_hosts {bad} not in host_devices "
+                             f"{sorted(host_devices)}")
     try:
         return _drive(dep, make_step, state, data, num_steps, monitor,
                       fail_latch, rejoin_latch, stop_for_grow,
-                      host_devices=host_devices, model_axis=model_axis,
+                      host_devices=host_devices, initial_hosts=initial_hosts,
+                      model_axis=model_axis,
                       like=like, shardings_fn=shardings_fn,
                       allow_grow=allow_grow, max_events=max_events,
                       fault_injector=fault_injector, on_metrics=on_metrics,
@@ -145,12 +158,12 @@ def run_elastic(dep: Dependability, make_step: Callable, state, data,
 
 
 def _drive(dep, make_step, state, data, num_steps, monitor, fail_latch,
-           rejoin_latch, stop_for_grow, *, host_devices, model_axis, like,
-           shardings_fn, allow_grow, max_events, fault_injector, on_metrics,
-           on_event) -> Tuple[Any, Dict]:
+           rejoin_latch, stop_for_grow, *, host_devices, initial_hosts,
+           model_axis, like, shardings_fn, allow_grow, max_events,
+           fault_injector, on_metrics, on_event) -> Tuple[Any, Dict]:
     events: List[MeshEvent] = []
     all_history: List[Dict] = []
-    active = sorted(host_devices)
+    active = sorted(host_devices if initial_hosts is None else initial_hosts)
     first = True
     while True:
         devices = [d for h in active for d in host_devices[h]]

@@ -25,7 +25,8 @@ from __future__ import annotations
 
 import statistics
 import time
-from typing import Dict, List, Optional, Set, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Set, Tuple
 
 
 class SimulatedFailure(RuntimeError):
@@ -70,80 +71,139 @@ def flip_bit(leaf, bit: int):
 
 
 class FaultInjector:
+    """Deterministic fault scheduler for tests, examples, and the chaos
+    scenario engine (repro.chaos).
+
+    Every ``schedule_*`` call returns an integer event id; pending events
+    are inspectable (``pending``), cancellable (``cancel``), and bulk-
+    clearable (``reset``) — a chaos driver compiling a scenario can
+    therefore re-arm an injector between runs and assert exactly what is
+    still scheduled.  Duplicate schedules at the same step are kept as
+    distinct events (e.g. two replica kills at one engine step model a
+    correlated rack loss)."""
+
     def __init__(self):
-        self._fail_at: Dict[int, int] = {}     # step -> host
-        self._slow_at: Dict[int, float] = {}   # step -> extra seconds
-        self._flip_at: Dict[int, List[Tuple[str, int]]] = {}  # step -> flips
-        # replica-scoped (serving, docs/serving.md): engine step -> replica
-        self._kill_replica_at: Dict[int, int] = {}
-        self._spike_at: Dict[int, Tuple[Optional[int], float]] = {}
+        self._events: Dict[int, Dict] = {}    # eid -> event record
+        self._next_eid = 0
         self.triggered: List[int] = []
         self.sdc_injected: List[Tuple[int, str, int]] = []
         self.replica_kills: List[Tuple[int, int]] = []   # (step, replica)
 
-    def schedule_failstop(self, step: int, host_id: int = 0):
-        self._fail_at[step] = host_id
-        return self
+    # ------------------------------------------------------------------
+    # event bookkeeping
+    # ------------------------------------------------------------------
+    def _add(self, kind: str, step: int, **args) -> int:
+        eid = self._next_eid
+        self._next_eid += 1
+        self._events[eid] = {"id": eid, "kind": kind, "step": int(step),
+                             **args}
+        return eid
 
-    def schedule_straggle(self, step: int, extra_seconds: float):
-        self._slow_at[step] = extra_seconds
-        return self
+    def _match(self, kind: str):
+        """Pending events of ``kind`` in deterministic (step, id) order."""
+        return sorted((e for e in self._events.values()
+                       if e["kind"] == kind),
+                      key=lambda e: (e["step"], e["id"]))
 
-    def schedule_bitflip(self, step: int, leaf: str, bit: int):
+    def pending(self) -> List[Dict]:
+        """Snapshot of every not-yet-fired event, (step, id)-ordered."""
+        return sorted((dict(e) for e in self._events.values()),
+                      key=lambda e: (e["step"], e["id"]))
+
+    def cancel(self, event_id: int) -> bool:
+        """Remove one pending event; False if it already fired/was
+        cancelled."""
+        return self._events.pop(event_id, None) is not None
+
+    def reset(self) -> None:
+        """Drop every pending event (fired-event logs are kept)."""
+        self._events.clear()
+
+    # ------------------------------------------------------------------
+    # scheduling (each returns the event id)
+    # ------------------------------------------------------------------
+    def schedule_failstop(self, step: int, host_id: int = 0) -> int:
+        return self._add("failstop", step, host=host_id)
+
+    def schedule_straggle(self, step: int, extra_seconds: float) -> int:
+        return self._add("straggle", step, extra=float(extra_seconds))
+
+    def schedule_bitflip(self, step: int, leaf: str, bit: int) -> int:
         """Flip ``bit`` of state leaf ``leaf`` (dotted name, checkpoint-
         manifest convention: e.g. "params.blocks.l0.mlp.w_in") just before
         superstep ``step`` executes.  Deterministic SDC for tests."""
-        self._flip_at.setdefault(step, []).append((leaf, bit))
-        return self
+        return self._add("bitflip", step, leaf=leaf, bit=int(bit))
 
-    def schedule_replica_kill(self, step: int, replica_id: int = 0):
+    def schedule_replica_kill(self, step: int, replica_id: int = 0) -> int:
         """Kill serving replica ``replica_id`` at engine step ``step``:
         ``check_replica`` raises ``SimulatedFailure(kind="replica-kill")``
         the first time that replica is dispatched to at or past the step.
         The serving engine treats it exactly like a heartbeat-detected
         death — drain, retry on survivors (docs/serving.md)."""
-        self._kill_replica_at[step] = replica_id
-        return self
+        return self._add("replica-kill", step, replica=replica_id)
 
     def schedule_latency_spike(self, step: int, extra_seconds: float,
-                               replica_id: Optional[int] = None):
+                               replica_id: Optional[int] = None) -> int:
         """Inject a latency spike at engine step ``step``: the dispatched
         replica (or only ``replica_id`` when given) sleeps
         ``extra_seconds`` before its work — the serving fail-stutter
         counterpart of ``schedule_straggle``, drivable from latency
         benchmarks (p99) and straggler tests."""
-        self._spike_at[step] = (replica_id, extra_seconds)
-        return self
+        return self._add("latency-spike", step, replica=replica_id,
+                         extra=float(extra_seconds))
 
+    def schedule_replica_sdc(self, step: int, replica_id: int = 0,
+                             detail: str = "injected") -> int:
+        """Corrupt serving replica ``replica_id`` at or past engine step
+        ``step``: ``check_replica`` raises ``CorruptionDetected`` the next
+        time the replica is dispatched to — the deterministic serve-side
+        counterpart of ``schedule_bitflip`` (an SDC storm hitting a
+        replica's decode path).  The engine takes the sentinel path:
+        discard the step, fail the replica, retry its streams."""
+        return self._add("replica-sdc", step, replica=replica_id,
+                         detail=detail)
+
+    # ------------------------------------------------------------------
+    # firing
+    # ------------------------------------------------------------------
     def check_replica(self, step: int, replica_id: int):
         """Call before dispatching work to a replica at an engine step."""
-        if step in self._spike_at:
-            target, extra = self._spike_at[step]
-            if target is None or target == replica_id:
-                del self._spike_at[step]
-                time.sleep(extra)
-        for at in sorted(self._kill_replica_at):
-            # ">= at": the victim may not be dispatched at the exact step
+        for ev in self._match("latency-spike"):
+            if ev["step"] == step and (ev["replica"] is None
+                                       or ev["replica"] == replica_id):
+                del self._events[ev["id"]]
+                time.sleep(ev["extra"])
+                break
+        for ev in self._match("replica-sdc"):
+            if step >= ev["step"] and ev["replica"] == replica_id:
+                del self._events[ev["id"]]
+                raise CorruptionDetected(step, "injected-sdc",
+                                         ev["detail"])
+        for ev in self._match("replica-kill"):
+            # ">= step": the victim may not be dispatched at the exact step
             # (empty pool, already draining) — the kill must still land
-            if step >= at and self._kill_replica_at[at] == replica_id:
-                del self._kill_replica_at[at]
+            if step >= ev["step"] and ev["replica"] == replica_id:
+                del self._events[ev["id"]]
                 self.replica_kills.append((step, replica_id))
                 raise SimulatedFailure(step, replica_id, kind="replica-kill")
 
     def check(self, step: int):
         """Call at each BSP step boundary."""
-        if step in self._slow_at:
-            time.sleep(self._slow_at.pop(step))
-        if step in self._fail_at:
-            host = self._fail_at.pop(step)
-            self.triggered.append(step)
-            raise SimulatedFailure(step, host)
+        for ev in self._match("straggle"):
+            if ev["step"] == step:
+                del self._events[ev["id"]]
+                time.sleep(ev["extra"])
+        for ev in self._match("failstop"):
+            if ev["step"] == step:
+                del self._events[ev["id"]]
+                self.triggered.append(step)
+                raise SimulatedFailure(step, ev["host"])
 
     def apply_sdc(self, step: int, state):
         """Return ``state`` with any bit-flips scheduled for ``step``
         applied (the identity when none are due).  Unlike ``check`` this
         corrupts silently — nothing raises."""
-        flips = self._flip_at.pop(step, None)
+        flips = [ev for ev in self._match("bitflip") if ev["step"] == step]
         if not flips:
             return state
         from repro.sdc.checksum import named_leaves
@@ -151,7 +211,9 @@ class FaultInjector:
 
         names = [n for n, _ in named_leaves(state)]
         leaves = [v for _, v in named_leaves(state)]
-        for leaf_name, bit in flips:
+        for ev in flips:
+            del self._events[ev["id"]]
+            leaf_name, bit = ev["leaf"], ev["bit"]
             if leaf_name not in names:
                 raise KeyError(f"no state leaf {leaf_name!r}; have "
                                f"{names[:8]}...")
@@ -168,24 +230,29 @@ class StragglerWatchdog:
         self.factor = factor
         self.window = window
         self.min_samples = min_samples
-        self.durations: List[float] = []
+        # bounded at exactly ``window`` samples: a week-long run observes
+        # millions of steps and the median only ever looks at the newest
+        # window anyway
+        self.durations: Deque[float] = deque(maxlen=window)
         self.flagged_steps: List[int] = []
 
     def observe(self, step: int, seconds: float) -> bool:
         """Returns True if this step is a straggler."""
         is_straggler = False
         if len(self.durations) >= self.min_samples:
-            med = statistics.median(self.durations[-self.window:])
+            med = statistics.median(self.durations)
             if seconds > self.factor * med:
                 is_straggler = True
                 self.flagged_steps.append(step)
+                # observability tail, same bounding discipline: keep the
+                # newest 4x window flags, not every flag since launch
+                if len(self.flagged_steps) > 4 * self.window:
+                    del self.flagged_steps[:-2 * self.window]
         self.durations.append(seconds)
-        if len(self.durations) > 4 * self.window:
-            self.durations = self.durations[-2 * self.window:]
         return is_straggler
 
     @property
     def median(self) -> Optional[float]:
         if not self.durations:
             return None
-        return statistics.median(self.durations[-self.window:])
+        return statistics.median(self.durations)

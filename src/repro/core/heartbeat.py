@@ -38,6 +38,15 @@ class HeartbeatEmitter:
         self._inc = time.time()
         self._thread: Optional[threading.Thread] = None
         self._paused = threading.Event()
+        # chaos hook (repro.chaos.driver): the "network" between emitter
+        # and monitor.  When set, each datagram's payload is offered to the
+        # filter and DROPPED unless it returns True — a partition drops
+        # beats while the emitter keeps running (asymmetric liveness: this
+        # host still believes it is connected), unlike pause(), which
+        # models the process itself dying.  seq keeps advancing across the
+        # partition, so healing is indistinguishable from ordinary delivery
+        # under the monitor's (inc, seq) ordering.
+        self.send_filter: Optional[Callable[[dict], bool]] = None
 
     def start(self):
         self._thread = threading.Thread(target=self._run, daemon=True)
@@ -54,12 +63,15 @@ class HeartbeatEmitter:
     def _run(self):
         while not self._stop.is_set():
             if not self._paused.is_set():
-                msg = json.dumps({"host": self.host_id, "seq": self._seq,
-                                  "inc": self._inc, "t": time.time()}).encode()
-                try:
-                    self._sock.sendto(msg, self.monitor_addr)
-                except OSError:
-                    pass
+                payload = {"host": self.host_id, "seq": self._seq,
+                           "inc": self._inc, "t": time.time()}
+                gate = self.send_filter
+                if gate is None or gate(payload):
+                    try:
+                        self._sock.sendto(json.dumps(payload).encode(),
+                                          self.monitor_addr)
+                    except OSError:
+                        pass
                 self._seq += 1
             time.sleep(self.period)
 

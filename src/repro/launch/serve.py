@@ -60,8 +60,9 @@ def main(argv=None) -> int:
     params = init_params(cfg, jax.random.PRNGKey(0))
     injector = None
     if args.kill_replica_at >= 0:
-        injector = FaultInjector().schedule_replica_kill(
-            args.kill_replica_at, replica_id=args.replicas - 1)
+        injector = FaultInjector()
+        injector.schedule_replica_kill(args.kill_replica_at,
+                                       replica_id=args.replicas - 1)
     fault_tolerant = args.fault_tolerant or args.standbys > 0
 
     engine = ServeEngine(cfg, params, num_replicas=args.replicas,

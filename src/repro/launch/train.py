@@ -147,7 +147,8 @@ def main(argv=None) -> int:
 
         injector = None
         if args.inject_failure:
-            injector = FaultInjector().schedule_failstop(args.inject_failure)
+            injector = FaultInjector()
+            injector.schedule_failstop(args.inject_failure)
         if args.inject_bitflip:
             step_s, leaf, bit_s = args.inject_bitflip.split(":")
             injector = injector or FaultInjector()

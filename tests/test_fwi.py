@@ -53,7 +53,8 @@ def test_fwi_crash_recovery(tmp_path, observed):
     dep = Dependability(DependabilityConfig(
         checkpoint_dir=str(tmp_path), policy_mode="every_n", every_n=2,
         signal_detection=False)).start()
-    injector = FaultInjector().schedule_failstop(4)
+    injector = FaultInjector()
+    injector.schedule_failstop(4)
     st, _ = run_fwi(CFG, observed["baseline"], dep=dep,
                     fault_injector=injector)
     assert np.array_equal(np.asarray(ref_state["params"]["c"]),
@@ -68,7 +69,8 @@ def test_fwi_local_scope_shard_checkpointing(tmp_path, observed):
     dep = Dependability(DependabilityConfig(
         checkpoint_dir=str(tmp_path), policy_mode="every_n", every_n=2,
         signal_detection=False)).start()
-    injector = FaultInjector().schedule_failstop(4)
+    injector = FaultInjector()
+    injector.schedule_failstop(4)
     st, _ = run_fwi(CFG, observed["baseline"], dep=dep,
                     fault_injector=injector, local_scope=True, dp_width=2)
     assert np.array_equal(np.asarray(ref_state["params"]["c"]),

@@ -129,6 +129,60 @@ def test_acknowledge_excludes_until_rejoin():
     mon.stop()
 
 
+def test_asymmetric_partition_latches_and_orders_rejoin():
+    """A network partition is asymmetric: host B keeps emitting (it
+    believes itself connected) but its datagrams never reach the monitor —
+    A sees B dead while B sees A alive.  The monitor must (1) declare B
+    failed, (2) keep B excluded after acknowledge even when a STALE
+    in-flight datagram from before the partition finally lands (split-brain
+    guard: a beat at or below the last accepted (inc, seq) is not a
+    rejoin), and (3) rejoin B through ordinary delivery once the partition
+    heals, because B's seq kept advancing behind the cut."""
+    import json
+    import socket
+
+    failures, rejoins = [], []
+    mon = HeartbeatMonitor(num_hosts=2, period=0.03, timeout_factor=4.0,
+                           on_failure=failures.append,
+                           on_rejoin=rejoins.append).start()
+    ems = [HeartbeatEmitter(i, mon.addr, 0.03).start() for i in range(2)]
+    time.sleep(0.25)
+
+    # partition: drop B's datagrams in the "network" — B's emitter keeps
+    # running and its seq keeps advancing (unlike pause(), which models
+    # the process dying)
+    ems[1].send_filter = lambda payload: False
+    deadline = time.time() + 3
+    while not mon.any_failure() and time.time() < deadline:
+        time.sleep(0.02)
+    assert mon.failed_hosts() == [1] and failures == [1]
+    mon.acknowledge(1)                    # recovery layer handled it
+    assert 1 in mon.excluded
+
+    # a pre-partition datagram finally delivered: (inc, seq) at/below the
+    # last accepted beat must NOT read as a rejoin
+    inc, seq = mon._last_beat[1]
+    sock = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+    sock.sendto(json.dumps({"host": 1, "seq": seq, "inc": inc,
+                            "t": time.time()}).encode(), tuple(mon.addr))
+    sock.close()
+    time.sleep(0.25)
+    assert rejoins == [] and 1 in mon.excluded
+    assert 1 not in mon.alive_hosts()
+
+    # heal: B's live beats carry a seq larger than anything accepted
+    # before the cut — ordinary delivery is the rejoin
+    ems[1].send_filter = None
+    deadline = time.time() + 3
+    while not rejoins and time.time() < deadline:
+        time.sleep(0.02)
+    assert rejoins == [1]
+    assert 1 in mon.alive_hosts() and failures == [1]
+    for e in ems:
+        e.stop()
+    mon.stop()
+
+
 def test_termination_signal_latch():
     ts = TerminationSignal(signals=(signal.SIGUSR1,)).install()
     try:

@@ -41,7 +41,9 @@ def test_crash_recovery_bit_exact(tmp_path, async_save):
     data = make_pipeline(cfg, 16, 4)
     dep = _dep(tmp_path, async_save=async_save)
     dep.register_local_state(data)
-    injector = FaultInjector().schedule_failstop(5).schedule_failstop(7)
+    injector = FaultInjector()
+    injector.schedule_failstop(5)
+    injector.schedule_failstop(7)
     state, info = run_with_recovery(dep, step_fn, state, data, steps,
                                     fault_injector=injector, like=state,
                                     max_restarts=3)
@@ -79,7 +81,8 @@ def test_straggler_watchdog_flags_slow_step(tmp_path):
     data = make_pipeline(cfg, 16, 2)
     dep = _dep(tmp_path, straggler_factor=2.5)
     dep.register_local_state(data)
-    injector = FaultInjector().schedule_straggle(8, extra_seconds=1.0)
+    injector = FaultInjector()
+    injector.schedule_straggle(8, extra_seconds=1.0)
     state, status, hist = run_bsp(dep, step_fn, state, data, 10,
                                   fault_injector=injector)
     # straggle(8) sleeps inside step 8's superstep window

@@ -66,7 +66,8 @@ def test_flip_bit_range_checked():
 
 
 def test_injector_applies_scheduled_flip_once():
-    inj = FaultInjector().schedule_bitflip(3, "a.b", 5)
+    inj = FaultInjector()
+    inj.schedule_bitflip(3, "a.b", 5)
     state = {"a": {"b": jax.random.normal(KEY, (16,))}, "c": np.arange(4)}
     same = inj.apply_sdc(2, state)
     assert same is state                       # nothing due at step 2
@@ -80,7 +81,8 @@ def test_injector_applies_scheduled_flip_once():
 
 
 def test_injector_unknown_leaf_raises():
-    inj = FaultInjector().schedule_bitflip(1, "nope", 0)
+    inj = FaultInjector()
+    inj.schedule_bitflip(1, "nope", 0)
     with pytest.raises(KeyError):
         inj.apply_sdc(1, {"a": np.zeros(4)})
 
@@ -224,7 +226,8 @@ def test_scrub_detects_bitflip_and_recovery_reconverges(tmp_path):
     data = make_pipeline(cfg, 16, 4)
     dep = _dep(tmp_path, scrub=True, scrub_fraction=1.0)
     dep.register_local_state(data)
-    injector = FaultInjector().schedule_bitflip(5, leaf, bit=30)
+    injector = FaultInjector()
+    injector.schedule_bitflip(5, leaf, bit=30)
     state, info = run_with_recovery(dep, step_fn, state, data, steps,
                                     fault_injector=injector, like=state,
                                     max_restarts=3)
@@ -261,9 +264,9 @@ def test_repeat_corruption_walks_back_past_suspect_checkpoint(tmp_path):
     # flip at 5 -> detected, rollback to ckpt@4, replay; flip at 6 ->
     # detected again before any new checkpoint: ckpt@4 is now suspect and
     # excluded, so the second rollback must restore ckpt@2
-    injector = (FaultInjector()
-                .schedule_bitflip(5, leaf, bit=30)
-                .schedule_bitflip(6, leaf, bit=31))
+    injector = FaultInjector()
+    injector.schedule_bitflip(5, leaf, bit=30)
+    injector.schedule_bitflip(6, leaf, bit=31)
     state, info = run_with_recovery(dep, step_fn, state, data, steps,
                                     fault_injector=injector, like=state,
                                     max_restarts=4)
@@ -296,7 +299,8 @@ def test_sentinel_catches_unscrubbed_flip_and_recovers(tmp_path):
     data = make_pipeline(cfg, 16, 4)
     dep = _dep(tmp_path, sentinel=True, sentinel_warmup=2)
     dep.register_local_state(data)
-    injector = FaultInjector().schedule_bitflip(5, leaf, bit=30)
+    injector = FaultInjector()
+    injector.schedule_bitflip(5, leaf, bit=30)
     state, info = run_with_recovery(dep, step_fn, state, data, steps,
                                     fault_injector=injector, like=state,
                                     max_restarts=3)

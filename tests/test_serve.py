@@ -282,7 +282,8 @@ def test_logit_stats_entropy_and_nonfinite():
 # ---------------------------------------------------------------------------
 
 def test_fault_injector_replica_kill_targets_one_replica():
-    inj = FaultInjector().schedule_replica_kill(3, replica_id=1)
+    inj = FaultInjector()
+    inj.schedule_replica_kill(3, replica_id=1)
     inj.check_replica(2, 1)              # before the step: nothing
     inj.check_replica(3, 0)              # wrong replica: nothing
     with pytest.raises(SimulatedFailure) as e:
@@ -294,13 +295,15 @@ def test_fault_injector_replica_kill_targets_one_replica():
 
 def test_fault_injector_kill_lands_past_scheduled_step():
     # the victim may not be dispatched at the exact step — >= semantics
-    inj = FaultInjector().schedule_replica_kill(3, replica_id=0)
+    inj = FaultInjector()
+    inj.schedule_replica_kill(3, replica_id=0)
     with pytest.raises(SimulatedFailure):
         inj.check_replica(7, 0)
 
 
 def test_fault_injector_latency_spike():
-    inj = FaultInjector().schedule_latency_spike(1, 0.05, replica_id=1)
+    inj = FaultInjector()
+    inj.schedule_latency_spike(1, 0.05, replica_id=1)
     t0 = time.perf_counter()
     inj.check_replica(1, 0)              # untargeted replica: no sleep
     assert time.perf_counter() - t0 < 0.04
@@ -433,7 +436,8 @@ def test_e2e_failover_kill_replica_mid_decode(params):
     gen = 8
     ref = _reference_streams(params, prompts, gen)
 
-    inj = FaultInjector().schedule_replica_kill(3, replica_id=1)
+    inj = FaultInjector()
+    inj.schedule_replica_kill(3, replica_id=1)
     # generous timeout: heartbeat detection is not under test here, and a
     # GC/compile pause in a long pytest process must not false-positive
     # the healthy replica
@@ -538,7 +542,8 @@ def test_e2e_warm_standby_restores_capacity(tmp_path, params):
     manager.save(0, {"params": params})
     like = jax.eval_shape(lambda: params)
 
-    inj = FaultInjector().schedule_replica_kill(2, replica_id=0)
+    inj = FaultInjector()
+    inj.schedule_replica_kill(2, replica_id=0)
     eng = ServeEngine(CFG, params, num_replicas=1, slots_per_replica=2,
                       max_len=MAX_LEN, fault_tolerant=True,
                       heartbeat_period=0.05, heartbeat_timeout_factor=40.0,
@@ -556,7 +561,8 @@ def test_e2e_warm_standby_restores_capacity(tmp_path, params):
 
 
 def test_all_replicas_dead_no_standby_raises(params):
-    inj = FaultInjector().schedule_replica_kill(0, replica_id=0)
+    inj = FaultInjector()
+    inj.schedule_replica_kill(0, replica_id=0)
     eng = ServeEngine(CFG, params, num_replicas=1, slots_per_replica=2,
                       max_len=MAX_LEN, fault_tolerant=True,
                       heartbeat_period=0.05, heartbeat_timeout_factor=40.0,

@@ -42,7 +42,8 @@ def test_full_dependability_stack(tmp_path):
     data = make_pipeline(cfg, 16, 4)
     dep.register_local_state(data)
     state = init_state(cfg, KEY)
-    injector = FaultInjector().schedule_failstop(7)
+    injector = FaultInjector()
+    injector.schedule_failstop(7)
     state, info = run_with_recovery(dep, step_fn, state, data, steps,
                                     fault_injector=injector, like=state)
     assert info["status"] == "done"
