@@ -21,6 +21,9 @@ test -f tests/test_delta.py
 # and the chaos scenario suite (tests/test_chaos.py: schema/driver/sim
 # units + the compound-trace E2Es, which carry the `slow` marker)
 test -f tests/test_chaos.py
+# and the telemetry suite (tests/test_obs.py: bus/metrics/timeline units
+# + the record-and-replay round trip)
+test -f tests/test_obs.py
 ARGS=()
 for a in "$@"; do
   if [ "$a" = "--fast" ]; then

@@ -45,6 +45,21 @@ from repro.chaos.scenario import Scenario, ScenarioError
 from repro.core.failures import CorruptionDetected, FaultInjector
 
 
+def _emit_scenario(obs, scenario: Scenario, plane: str) -> None:
+    """Record the compiled scenario declaratively on the bus: one
+    ``chaos/<kind>`` event per scenario event (original at/until/args)
+    plus a ``chaos/scenario`` meta event carrying name/clock/seed.
+    ``repro.obs.export.to_scenario`` reconstructs the Scenario losslessly
+    from these — the record half of record-and-replay."""
+    if obs is None:
+        return
+    obs.emit("chaos", "scenario", name=scenario.name,
+             clock=scenario.clock, seed=scenario.seed, plane=plane)
+    for ev in scenario.sorted_events():
+        obs.emit("chaos", ev.kind, at=ev.at, until=ev.until, plane=plane,
+                 **ev.args)
+
+
 def _storm_flips(scenario: Scenario, event, leaf_names: Sequence[str]
                  ) -> List[Tuple[int, str, int]]:
     """Deterministic (step, leaf, bit) schedule for one sdc_storm event —
@@ -86,14 +101,18 @@ class TrainScenarioDriver:
                  monitor_host: int = 0,
                  leaf_names: Sequence[str] = (),
                  step_seconds: float = 0.05,
-                 settle_seconds: float = 0.35):
+                 settle_seconds: float = 0.35,
+                 obs=None):
         if scenario.clock != "step":
             raise ScenarioError(
                 f"training driver needs clock='step', scenario "
                 f"{scenario.name!r} uses {scenario.clock!r}")
         scenario.validate()
         self.scenario = scenario
+        self.obs = obs
         self.injector = injector if injector is not None else FaultInjector()
+        if obs is not None and self.injector.obs is None:
+            self.injector.obs = obs
         self.emitters = dict(emitters or {})
         self.monitor_host = monitor_host
         self.settle_seconds = settle_seconds
@@ -105,6 +124,7 @@ class TrainScenarioDriver:
         self._actions: List[Tuple[int, int, str, Callable[[], None]]] = []
         self._compile(leaf_names, step_seconds)
         self._actions.sort(key=lambda a: (a[0], a[1]))
+        _emit_scenario(self.obs, scenario, plane="train")
 
     # ------------------------------------------------------------------
     # compilation
@@ -200,6 +220,8 @@ class TrainScenarioDriver:
         per step (a replay after rollback overwrites the corrupted-era
         record, so the merged trajectory is the one that survived)."""
         self._records[step] = rec
+        if self.obs is not None:
+            self.obs.emit("chaos", "record", **rec)
         for at, eid, phase, fire in self._actions:
             if at > step:
                 break
@@ -209,11 +231,26 @@ class TrainScenarioDriver:
             self._fired.add(key)
             self.applied.append({"step": step, "at": at, "phase": phase,
                                  "event": eid})
+            if self.obs is not None:
+                self.obs.emit("chaos", "applied", step=step, at=at,
+                              phase=phase, event=eid)
             fire()
 
     def history(self) -> List[Dict]:
         """Merged per-step metrics records, step-ordered (newest record
-        wins for steps replayed after a rollback)."""
+        wins for steps replayed after a rollback).  With ``obs`` attached
+        the records live on the bus ("chaos"/"record"); newest-per-step
+        still wins because later emits overwrite earlier steps' entries
+        in the reconstruction."""
+        if self.obs is not None:
+            recs: Dict[int, Dict] = {}
+            for e in self.obs.events(subsystem="chaos", kind="record"):
+                recs[e.data["step"]] = dict(e.data)
+            # the bus ring is bounded: records that fell off the front are
+            # still in the local dict — merge, bus (newer) wins
+            merged = dict(self._records)
+            merged.update(recs)
+            return [merged[s] for s in sorted(merged)]
         return [self._records[s] for s in sorted(self._records)]
 
     def dead_intervals(self) -> Dict[int, List[Tuple[float, float]]]:
@@ -254,6 +291,7 @@ def run_scenario_elastic(dep, make_step, state, data, num_steps, *,
                          max_rollbacks: int = 4,
                          on_metrics: Optional[Callable] = None,
                          on_event: Optional[Callable] = None,
+                         obs=None,
                          **kw) -> Tuple[Any, Dict]:
     """Drive ``run_elastic`` through ``scenario``, surviving detected
     corruption by rolling back to the newest verified checkpoint and
@@ -269,9 +307,13 @@ def run_scenario_elastic(dep, make_step, state, data, num_steps, *,
 
     if settle_seconds is None:
         settle_seconds = 7.0 * dep.config.heartbeat_period
+    if obs is None:
+        obs = dep.obs                      # reuse an attached handle
+    elif dep.obs is None:
+        dep.attach_obs(obs)                # thread telemetry end to end
     driver = TrainScenarioDriver(
         scenario, emitters=emitters, leaf_names=leaf_names,
-        step_seconds=step_seconds, settle_seconds=settle_seconds)
+        step_seconds=step_seconds, settle_seconds=settle_seconds, obs=obs)
 
     def chained_metrics(step, rec):
         driver.on_metrics(step, rec)
@@ -312,6 +354,10 @@ def run_scenario_elastic(dep, make_step, state, data, num_steps, *,
             state, got = dep.restore_latest(like=like)
             extra_history.append({"step": got, "event": f"rollback:{got}"})
             dep.reset_sdc()
+            if obs is not None:
+                # the re-entry IS the resume for this corruption incident
+                obs.emit("train", "resume", step=got,
+                         rolled_back_from=e.step, rollbacks=rollbacks)
     merged = driver.history() + extra_history
     merged.extend(h for h in info["history"] if "event" in h)
     info = dict(info, events=events, rollbacks=rollbacks,
@@ -347,6 +393,9 @@ class ServeScenarioDriver:
         scenario.validate()
         self.engine = engine
         self.scenario = scenario
+        # the engine always owns an Observability; the driver records its
+        # compiled scenario on the same bus so one log tells both stories
+        self.obs = getattr(engine, "obs", None)
         self.base_rate = int(base_rate)
         self.prompt_len = prompt_len
         self.max_new_tokens = max_new_tokens
@@ -362,7 +411,10 @@ class ServeScenarioDriver:
         self.drained_series: List[int] = []
         self._gates_on: set = set()
         self._prompt_rng = random.Random(f"{scenario.seed}/prompts")
+        if self.obs is not None and self.injector.obs is None:
+            self.injector.obs = self.obs
         self._compile(step_seconds)
+        _emit_scenario(self.obs, scenario, plane="serve")
 
     # ------------------------------------------------------------------
     # compilation

@@ -147,10 +147,24 @@ class Dependability:
         self._global_template = None
         self._global_shardings = None
         self.save_history: list = []
+        # telemetry handle (repro.obs.Observability); attach_obs threads it
+        # through the monitor and turns on event/metric emission everywhere
+        self.obs = None
 
     # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------
+    def attach_obs(self, obs) -> "Dependability":
+        """Wire a ``repro.obs.Observability`` through this facade: saves,
+        restores, SDC detections, and heartbeat failures/rejoins all emit
+        onto its bus, and the measured R/D terms flow into the policy via
+        ``observe_recovery``.  Call before or after ``start()`` — the
+        monitor picks the handle up either way."""
+        self.obs = obs
+        if self.monitor is not None:
+            self.monitor.obs = obs
+        return self
+
     def start(self) -> "Dependability":
         if self.config.signal_detection:
             self.signals = TerminationSignal().install()
@@ -164,6 +178,7 @@ class Dependability:
                                           (lambda _: None))(h),
                     on_rejoin=lambda h: (self.on_host_rejoin or
                                          (lambda _: None))(h),
+                    obs=self.obs,
                 ).start()
             addr = (self.monitor.addr if self.monitor
                     else self.config.monitor_addr)
@@ -240,6 +255,7 @@ class Dependability:
             return
         bad = self.scrubber.verify(state)
         if bad:
+            self._emit_sdc(step, "scrub", ",".join(bad))
             raise CorruptionDetected(step, "scrub", ",".join(bad))
 
     def check_metrics(self, step: int, metrics: Dict) -> None:
@@ -254,7 +270,15 @@ class Dependability:
             nonfinite=(float(metrics["nonfinite"])
                        if "nonfinite" in metrics else None))
         if reason is not None:
+            self._emit_sdc(step, "sentinel", reason)
             raise CorruptionDetected(step, "sentinel", reason)
+
+    def _emit_sdc(self, step: int, tier: str, detail: str) -> None:
+        if self.obs is None:
+            return
+        self.obs.emit("sdc", "corruption", step=step, tier=tier,
+                      detail=detail)
+        self.obs.registry.counter("sdc.detected", tier=tier).inc()
 
     def reset_sdc(self) -> None:
         """Call after a rollback: the restored state is a different set of
@@ -298,6 +322,20 @@ class Dependability:
             # scrubbing was clean up to this step, else CorruptionDetected
             # would have unwound the loop before the save
             self.verified_steps.add(step)
+        if self.obs is not None:
+            self.obs.emit("checkpoint", "save", step=step,
+                          save_kind=stats.kind,
+                          final=final, bytes=stats.bytes_written,
+                          critical_path_s=cost, blocking=blocking,
+                          dirty_blocks=stats.dirty_blocks,
+                          total_blocks=stats.total_blocks)
+            reg = self.obs.registry
+            reg.histogram("checkpoint.critical_path_ms").observe(cost * 1e3)
+            reg.counter("checkpoint.saves", kind=stats.kind).inc()
+            reg.counter("checkpoint.bytes").inc(stats.bytes_written)
+            if stats.total_blocks:
+                reg.histogram("checkpoint.dirty_block_ratio").observe(
+                    stats.dirty_blocks / stats.total_blocks)
         return stats
 
     def restore_latest(self, like=None, shardings=None,
@@ -314,6 +352,7 @@ class Dependability:
         shardings = (shardings if shardings is not None
                      else self._global_shardings)
         self.last_restore_skipped = []
+        t0 = time.perf_counter()
         wants_shards = hasattr(self._local_provider, "load_shard_state_dicts")
         if step is not None:
             state, local = self.manager.restore(step=step, like=like,
@@ -349,4 +388,20 @@ class Dependability:
                 self._local_provider.load_shard_state_dicts(shard_dicts)
             elif local is not None:
                 self._local_provider.load_state_dict(local)
+        restore_s = time.perf_counter() - t0
+        if self.obs is not None:
+            # live Young/Daly (telemetry opt-in): the measured restore IS
+            # the R term; the monitor's last declaration latency is the D
+            # term (when heartbeat is on)
+            detect_s = None
+            if self.monitor is not None and self.monitor.detection_latency:
+                detect_s = max(self.monitor.detection_latency.values())
+            self.policy.observe_recovery(restart_s=restore_s,
+                                         downtime_s=detect_s)
+            self.obs.emit("checkpoint", "restore", step=got_step,
+                          restore_s=restore_s,
+                          skipped=list(self.last_restore_skipped))
+            self.obs.registry.histogram("checkpoint.restore_ms").observe(
+                restore_s * 1e3)
+            self.obs.registry.counter("checkpoint.restores").inc()
         return state, got_step

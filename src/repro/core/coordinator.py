@@ -80,6 +80,11 @@ def run_bsp(dep: Dependability, train_step: Callable, state, data,
         rec = {"step": step, "seconds": dt, "straggler": straggler,
                **{k: float(v) for k, v in metrics.items()}}
         history.append(rec)
+        if dep.obs is not None:
+            # one bus record per superstep — the instrumented path
+            # benchmarks/bench_obs.py holds to <2% over the bare loop
+            dep.obs.emit("train", "step", **rec)
+            dep.obs.registry.histogram("train.step_ms").observe(dt * 1e3)
         if on_metrics:
             on_metrics(step, rec)
         dep.check_metrics(step, metrics)       # may raise CorruptionDetected
@@ -128,6 +133,12 @@ def run_with_recovery(dep: Dependability, train_step: Callable, state, data,
             else:
                 all_history.append({"step": e.step,
                                     "event": f"failure:{e.kind}"})
+                if dep.obs is not None:
+                    # SDC tiers emit their own detection inside
+                    # verify_state/check_metrics; fail-stop is raised by
+                    # the injector, so record the detection here
+                    dep.obs.emit("train", "interrupted", step=e.step,
+                                 failure_kind=e.kind)
             restarts += 1
             if restarts > max_restarts:
                 raise
@@ -149,6 +160,12 @@ def run_with_recovery(dep: Dependability, train_step: Callable, state, data,
                             str(s) for s, _ in dep.last_restore_skipped)})
                 if is_corruption:
                     last_corrupt_restore = (got, len(dep.save_history))
+                if dep.obs is not None:
+                    dep.obs.registry.histogram("train.rollback_depth").\
+                        observe(max(0, e.step - got))
+                    dep.obs.emit("train", "resume", step=got,
+                                 rolled_back_from=e.step,
+                                 restarts=restarts)
             except FileNotFoundError as fnf:
                 # no (acceptable) checkpoint at all: restart from scratch
                 all_history.append({"step": e.step,
@@ -157,4 +174,7 @@ def run_with_recovery(dep: Dependability, train_step: Callable, state, data,
                 if local0 is not None:
                     dep._local_provider.load_state_dict(local0)
                 last_corrupt_restore = None
+                if dep.obs is not None:
+                    dep.obs.emit("train", "resume", step=0, scratch=True,
+                                 restarts=restarts)
             dep.reset_sdc()

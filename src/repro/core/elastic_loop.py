@@ -187,6 +187,9 @@ def _drive(dep, make_step, state, data, num_steps, monitor, fail_latch,
                                                 shardings=shardings)
                 all_history.append({"step": got,
                                     "event": f"resume:dp={dp}"})
+                if dep.obs is not None:
+                    dep.obs.emit("elastic", "resume", step=got, dp=dp)
+                    dep.obs.registry.gauge("elastic.dp_width").set(dp)
             state, status, hist = run_bsp(
                 dep, train_step, state, data, num_steps,
                 fault_injector=fault_injector, on_metrics=on_metrics,
@@ -232,6 +235,10 @@ def _drive(dep, make_step, state, data, num_steps, monitor, fail_latch,
             return state, {"status": "interrupted", "events": events,
                            "history": all_history, "dp": dp}
         events.append(event)
+        if dep.obs is not None:
+            dep.obs.emit("elastic", event.kind, hosts=list(event.hosts),
+                         step=event.step, dp=event.dp)
+            dep.obs.registry.counter(f"elastic.{event.kind}s").inc()
         if len(events) > max_events:
             # over the cap: record the event but do NOT process it (no
             # on_event, no restore cycle) — a flapping host must not buy

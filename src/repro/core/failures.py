@@ -82,12 +82,19 @@ class FaultInjector:
     distinct events (e.g. two replica kills at one engine step model a
     correlated rack loss)."""
 
-    def __init__(self):
+    def __init__(self, obs=None):
         self._events: Dict[int, Dict] = {}    # eid -> event record
         self._next_eid = 0
         self.triggered: List[int] = []
         self.sdc_injected: List[Tuple[int, str, int]] = []
         self.replica_kills: List[Tuple[int, int]] = []   # (step, replica)
+        # telemetry: fired injections land on the bus as ground truth to
+        # hold the detectors' events against (injected vs detected)
+        self.obs = obs
+
+    def _emit(self, kind: str, **data) -> None:
+        if self.obs is not None:
+            self.obs.emit("injector", kind, **data)
 
     # ------------------------------------------------------------------
     # event bookkeeping
@@ -177,6 +184,8 @@ class FaultInjector:
         for ev in self._match("replica-sdc"):
             if step >= ev["step"] and ev["replica"] == replica_id:
                 del self._events[ev["id"]]
+                self._emit("replica_sdc", step=step, replica=replica_id,
+                           detail=ev["detail"])
                 raise CorruptionDetected(step, "injected-sdc",
                                          ev["detail"])
         for ev in self._match("replica-kill"):
@@ -185,6 +194,7 @@ class FaultInjector:
             if step >= ev["step"] and ev["replica"] == replica_id:
                 del self._events[ev["id"]]
                 self.replica_kills.append((step, replica_id))
+                self._emit("replica_kill", step=step, replica=replica_id)
                 raise SimulatedFailure(step, replica_id, kind="replica-kill")
 
     def check(self, step: int):
@@ -192,11 +202,13 @@ class FaultInjector:
         for ev in self._match("straggle"):
             if ev["step"] == step:
                 del self._events[ev["id"]]
+                self._emit("straggle", step=step, extra=ev["extra"])
                 time.sleep(ev["extra"])
         for ev in self._match("failstop"):
             if ev["step"] == step:
                 del self._events[ev["id"]]
                 self.triggered.append(step)
+                self._emit("failstop", step=step, host=ev["host"])
                 raise SimulatedFailure(step, ev["host"])
 
     def apply_sdc(self, step: int, state):
@@ -220,6 +232,7 @@ class FaultInjector:
             i = names.index(leaf_name)
             leaves[i] = flip_bit(leaves[i], bit)
             self.sdc_injected.append((step, leaf_name, bit))
+            self._emit("bitflip", step=step, leaf=leaf_name, bit=bit)
         treedef = jax.tree_util.tree_structure(state)
         return jax.tree_util.tree_unflatten(treedef, leaves)
 

@@ -88,8 +88,11 @@ class HeartbeatMonitor:
                  on_failure: Optional[Callable[[int], None]] = None,
                  on_rejoin: Optional[Callable[[int], None]] = None,
                  startup_grace: Optional[float] = None,
-                 bind=("127.0.0.1", 0)):
+                 bind=("127.0.0.1", 0), obs=None):
         self.num_hosts = num_hosts
+        # telemetry (repro.obs.Observability): failure/rejoin events plus
+        # the per-host last-beat -> declared-failure latency histogram
+        self.obs = obs
         self.period = period
         self.timeout = timeout_factor * period
         # extra allowance before a never-seen host counts as failed: real
@@ -110,6 +113,11 @@ class HeartbeatMonitor:
         # newest (inc, seq) accepted per host: a datagram at or below it is
         # a stale in-flight beat, not a rejoin
         self._last_beat: Dict[int, tuple] = {}
+        # host -> seconds from last accepted beat to the failure
+        # declaration, for the most recent failure of that host.  This is
+        # the measured detection term D the Young/Daly model otherwise
+        # only estimates (bench_heartbeat recomputed it externally before).
+        self.detection_latency: Dict[int, float] = {}
         self._stop = threading.Event()
         self._threads = []
         self._lock = threading.Lock()
@@ -192,8 +200,12 @@ class HeartbeatMonitor:
                 self.last_seen[h] = time.time()
                 # a failed host beating again = recovered (failover/rejoin)
                 self.failed.pop(h, None)
-            if rejoined is not None and self.on_rejoin:
-                self.on_rejoin(rejoined)
+            if rejoined is not None:
+                if self.obs is not None:
+                    self.obs.emit("heartbeat", "rejoin", host=rejoined)
+                    self.obs.registry.counter("heartbeat.rejoins").inc()
+                if self.on_rejoin:
+                    self.on_rejoin(rejoined)
 
     def _check_loop(self):
         while not self._stop.is_set():
@@ -205,13 +217,29 @@ class HeartbeatMonitor:
                         continue
                     if now - seen > self.timeout:
                         self.failed[h] = now
+                        # last-beat -> declaration gap; clamped because a
+                        # never-seen host's last_seen is seeded into the
+                        # future by startup_grace
+                        self.detection_latency[h] = max(0.0, now - seen)
                         newly_failed.append(h)
+            for h in newly_failed:
+                self._observe_failure(h)
             # callbacks run OUTSIDE the lock: handlers may call back into
             # the monitor (acknowledge, failed_hosts, ...) without deadlock
             if self.on_failure:
                 for h in newly_failed:
                     self.on_failure(h)
             time.sleep(self.period / 2)
+
+    def _observe_failure(self, host: int) -> None:
+        if self.obs is None:
+            return
+        latency = self.detection_latency.get(host, 0.0)
+        self.obs.emit("heartbeat", "failure", host=host,
+                      detection_latency_s=latency)
+        self.obs.registry.histogram("heartbeat.detection_latency_ms",
+                                    host=host).observe(latency * 1e3)
+        self.obs.registry.counter("heartbeat.failures").inc()
 
     def alive_hosts(self):
         with self._lock:

@@ -114,6 +114,23 @@ class CheckpointPolicy:
             self._kind_cost[k] * self._kind_count[k]
             for k in self._kind_cost) / total
 
+    def observe_recovery(self, restart_s: Optional[float] = None,
+                         downtime_s: Optional[float] = None) -> None:
+        """Feed *measured* recovery terms into the system model: R from a
+        timed restore (``Dependability.restore_latest``), D from the
+        heartbeat monitor's last-beat -> declaration latency.  EMA with
+        the same smoothing as C/step-time, so eq. (1)'s bracket tracks
+        the deployment instead of trusting config estimates (the
+        telemetry layer's live Young/Daly adaptation, ISSUE 7)."""
+        if restart_s is not None:
+            self.system.restart_seconds = (
+                self._ema * self.system.restart_seconds
+                + (1 - self._ema) * float(restart_s))
+        if downtime_s is not None:
+            self.system.downtime_seconds = (
+                self._ema * self.system.downtime_seconds
+                + (1 - self._ema) * float(downtime_s))
+
     # ---- decisions ----
     def interval_steps(self) -> int:
         if self.mode == "every_n":

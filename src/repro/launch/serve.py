@@ -46,6 +46,13 @@ def main(argv=None) -> int:
     ap.add_argument("--kill-replica-at", type=int, default=-1,
                     help="inject a replica kill at this engine step "
                     "(drives the failover path end to end)")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="record the run's telemetry bundle here "
+                         "(events.jsonl + trace.json + metrics, "
+                         "docs/observability.md)")
+    ap.add_argument("--metrics-snapshot", default="",
+                    help="write a JSON metrics snapshot to this path at "
+                         "the end of the run")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -65,11 +72,19 @@ def main(argv=None) -> int:
                                        replica_id=args.replicas - 1)
     fault_tolerant = args.fault_tolerant or args.standbys > 0
 
+    obs = None
+    if args.telemetry_dir or args.metrics_snapshot:
+        import os as _os
+        from repro.obs import Observability
+        obs = Observability(
+            jsonl_path=(_os.path.join(args.telemetry_dir, "events.jsonl")
+                        if args.telemetry_dir else None))
+
     engine = ServeEngine(cfg, params, num_replicas=args.replicas,
                          slots_per_replica=args.slots,
                          max_len=args.prompt_len + args.gen,
                          fault_tolerant=fault_tolerant,
-                         fault_injector=injector)
+                         fault_injector=injector, obs=obs)
     ckpt_dir = None
     if args.standbys > 0:
         # warm-standby params come back through restore_latest — the same
@@ -112,6 +127,20 @@ def main(argv=None) -> int:
     if retried:
         print(f"failover: {retried} request(s) drained and re-executed, "
               f"{len(engine.scheduler.failed_rids)} dropped")
+    if obs is not None:
+        summary = obs.timeline().summary()
+        mttr = summary["mttr_s"]
+        mttr_txt = f"MTTR={mttr:.3f}s, " if mttr is not None else ""
+        print(f"telemetry: {summary['incidents']} incidents, "
+              f"{mttr_txt}availability={summary['availability']:.4f} "
+              f"over {summary['span_s']:.1f}s observed")
+        if args.telemetry_dir:
+            paths = obs.dump(args.telemetry_dir)
+            print(f"telemetry bundle: {sorted(paths.values())}")
+        if args.metrics_snapshot:
+            obs.registry.to_json(args.metrics_snapshot)
+            print(f"metrics snapshot: {args.metrics_snapshot}")
+        obs.close()
     engine.shutdown()
     return 0 if len(results) == args.requests else 1
 

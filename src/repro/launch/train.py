@@ -92,6 +92,13 @@ def main(argv=None) -> int:
     ap.add_argument("--inject-bitflip", default="",
                     help="STEP:LEAF:BIT, e.g. 50:params.embed.tok:30 — "
                          "flip one state bit mid-run (SDC fault model)")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="record the run's telemetry bundle here "
+                         "(events.jsonl + trace.json + metrics, "
+                         "docs/observability.md)")
+    ap.add_argument("--metrics-snapshot", default="",
+                    help="write a JSON metrics snapshot to this path at "
+                         "the end of the run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -123,6 +130,15 @@ def main(argv=None) -> int:
                            num_nodes=args.num_nodes),
     )).start()
     dep.register_local_state(data)
+
+    obs = None
+    if args.telemetry_dir or args.metrics_snapshot:
+        from repro.obs import Observability
+        import os as _os
+        obs = Observability(
+            jsonl_path=(_os.path.join(args.telemetry_dir, "events.jsonl")
+                        if args.telemetry_dir else None))
+        dep.attach_obs(obs)
 
     with mesh_context(mesh):
         step_fn = jax.jit(
@@ -179,6 +195,20 @@ def main(argv=None) -> int:
     events = [h["event"] for h in info["history"] if "event" in h]
     if events:
         print(f"[train] failure/corruption events: {events}")
+    if obs is not None:
+        summary = obs.timeline().summary()
+        mttr = summary["mttr_s"]
+        mttr_txt = f"MTTR={mttr:.3f}s, " if mttr is not None else ""
+        print(f"[train] telemetry: {summary['incidents']} incidents, "
+              f"{mttr_txt}availability={summary['availability']:.4f} "
+              f"over {summary['span_s']:.1f}s observed")
+        if args.telemetry_dir:
+            paths = obs.dump(args.telemetry_dir)
+            print(f"[train] telemetry bundle: {sorted(paths.values())}")
+        if args.metrics_snapshot:
+            obs.registry.to_json(args.metrics_snapshot)
+            print(f"[train] metrics snapshot: {args.metrics_snapshot}")
+        obs.close()
     dep.stop()
     return 0
 

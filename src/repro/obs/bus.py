@@ -1,0 +1,190 @@
+"""Structured event bus: the one stream every dependability layer emits
+into (docs/observability.md).
+
+``EventBus`` is a thread-safe bounded ring buffer of ``Event`` records.
+Producers — the heartbeat monitor, ``CheckpointManager`` saves/restores,
+the SDC tiers, the elastic loop, the serving engine, and the chaos
+drivers — call ``emit(subsystem, kind, **data)``; the bus stamps both a
+monotonic timestamp (``t_mono``, for ordering and latency math) and a
+wall-clock one (``t_wall``, for correlating with external logs), assigns
+a global sequence number, and appends.  Consumers either poll
+(``events()`` returns a snapshot) or subscribe (``subscribe(fn)`` — the
+callback runs on the *emitting* thread, outside the bus lock, so a slow
+subscriber delays its producer but can never deadlock the bus).
+
+The ring is bounded (default ``DEFAULT_CAPACITY`` = the serving layer's
+long-standing 10k observability cap): under sustained traffic old events
+fall off the front and ``dropped`` counts them — the bus trades history
+for a hard memory bound, the same discipline ``Scheduler.reap`` applies
+to request records.
+
+A JSONL sink (``attach_jsonl``) persists every event as one JSON line at
+emit time — the durable record ``repro.obs.export.to_scenario`` converts
+back into a replayable chaos ``Scenario`` (record-and-replay).
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+#: ring-buffer bound, shared convention with serve.scheduler's
+#: OBSERVABILITY_CAP (the serving engine asserts its .events back-compat
+#: view stays under this via the bus)
+DEFAULT_CAPACITY = 10_000
+
+#: payload keys that would collide with Event's own fields when the
+#: event is flattened to one JSON object (to_dict / the JSONL sink) —
+#: emit rejects them up front so the collision is an immediate error,
+#: not a silently corrupted log
+RESERVED_KEYS = frozenset({"seq", "t_mono", "t_wall", "subsystem",
+                           "kind"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One structured event.  ``data`` carries the subsystem-specific
+    payload (host/replica/step/leaf ids, durations, byte counts...)."""
+    seq: int
+    t_mono: float          # time.perf_counter() at emit — ordering/latency
+    t_wall: float          # time.time() at emit — external correlation
+    subsystem: str         # "heartbeat" | "checkpoint" | "sdc" | ...
+    kind: str              # subsystem-specific event name
+    data: Dict[str, Any]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"seq": self.seq, "t_mono": self.t_mono,
+                "t_wall": self.t_wall, "subsystem": self.subsystem,
+                "kind": self.kind, **self.data}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Event":
+        d = dict(d)
+        return cls(seq=int(d.pop("seq", 0)),
+                   t_mono=float(d.pop("t_mono", 0.0)),
+                   t_wall=float(d.pop("t_wall", 0.0)),
+                   subsystem=str(d.pop("subsystem", "")),
+                   kind=str(d.pop("kind", "")), data=d)
+
+
+class EventBus:
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._ring: deque = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+        self._seq = 0
+        self.dropped = 0                   # events evicted off the ring
+        self._subscribers: List[Callable[[Event], None]] = []
+        self._jsonl: Optional[io.TextIOBase] = None
+        self._jsonl_path: Optional[str] = None
+
+    # ------------------------------------------------------------------
+    # producing
+    # ------------------------------------------------------------------
+    def emit(self, subsystem: str, kind: str, **data: Any) -> Event:
+        bad = RESERVED_KEYS & data.keys()
+        if bad:
+            raise ValueError(
+                f"event payload keys {sorted(bad)} collide with Event "
+                f"fields; rename them (e.g. kind -> save_kind)")
+        ev = Event(seq=0, t_mono=time.perf_counter(), t_wall=time.time(),
+                   subsystem=subsystem, kind=kind, data=data)
+        with self._lock:
+            ev = dataclasses.replace(ev, seq=self._seq)
+            self._seq += 1
+            if len(self._ring) == self.capacity:
+                self.dropped += 1
+            self._ring.append(ev)
+            subscribers = list(self._subscribers)
+            sink = self._jsonl
+        if sink is not None:
+            try:
+                sink.write(json.dumps(ev.to_dict()) + "\n")
+            except ValueError:
+                pass                       # sink closed under the emitter
+        # callbacks OUTSIDE the lock: a subscriber may emit (re-entrancy)
+        # or inspect the bus without deadlocking
+        for fn in subscribers:
+            fn(ev)
+        return ev
+
+    # ------------------------------------------------------------------
+    # consuming
+    # ------------------------------------------------------------------
+    def events(self, subsystem: Optional[str] = None,
+               kind: Optional[str] = None) -> List[Event]:
+        """Snapshot of the retained ring, oldest first, optionally
+        filtered."""
+        with self._lock:
+            evs = list(self._ring)
+        return [e for e in evs
+                if (subsystem is None or e.subsystem == subsystem)
+                and (kind is None or e.kind == kind)]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ring)
+
+    @property
+    def total_emitted(self) -> int:
+        with self._lock:
+            return self._seq
+
+    def subscribe(self, fn: Callable[[Event], None]) -> Callable:
+        """Register a hook invoked (on the emitting thread) for every
+        subsequent event; returns ``fn`` so it can be unsubscribed."""
+        with self._lock:
+            self._subscribers.append(fn)
+        return fn
+
+    def unsubscribe(self, fn: Callable[[Event], None]) -> None:
+        with self._lock:
+            if fn in self._subscribers:
+                self._subscribers.remove(fn)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+
+    # ------------------------------------------------------------------
+    # JSONL sink (record side of record-and-replay)
+    # ------------------------------------------------------------------
+    def attach_jsonl(self, path: str) -> str:
+        """Persist every subsequent event as one JSON line at ``path``
+        (append mode: re-attaching resumes the log)."""
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with self._lock:
+            if self._jsonl is not None:
+                self._jsonl.close()
+            self._jsonl = open(path, "a")
+            self._jsonl_path = path
+        return path
+
+    def flush(self) -> None:
+        with self._lock:
+            if self._jsonl is not None:
+                self._jsonl.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._jsonl is not None:
+                self._jsonl.close()
+                self._jsonl = None
+
+
+def load_jsonl(path: str) -> List[Event]:
+    """Read a recorded event log back (replay side); skips blank lines."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(Event.from_dict(json.loads(line)))
+    return out

@@ -34,10 +34,11 @@ import numpy as np
 
 from repro.core.failures import CorruptionDetected, SimulatedFailure
 from repro.core.heartbeat import HeartbeatMonitor
+from repro.obs import Observability
 from repro.sdc import DecodeSentinel
 from repro.serve.replica import Replica, ServeFns
 from repro.serve.router import NoHealthyReplicasError, ReplicaRouter
-from repro.serve.scheduler import DECODE, Scheduler, _trim
+from repro.serve.scheduler import DECODE, Scheduler
 
 
 def pctl(xs, q: float) -> float:
@@ -59,7 +60,8 @@ class ServeEngine:
                  max_prefill_per_step: int = 2,
                  max_retries: int = 3,
                  fault_injector=None,
-                 impl: Optional[str] = None):
+                 impl: Optional[str] = None,
+                 obs: Optional[Observability] = None):
         if not cfg.has_decode:
             raise ValueError(f"{cfg.name} is encoder-only; cannot serve "
                              "autoregressive decode")
@@ -67,6 +69,10 @@ class ServeEngine:
             raise ValueError(f"{cfg.name} takes embedding inputs; the "
                              "engine serves token prompts")
         self.cfg = cfg
+        # telemetry: the engine's event history lives on the obs bus (the
+        # old ``self.events`` list survives as a read-only property view);
+        # a shared Observability correlates serving with the other planes
+        self.obs = obs if obs is not None else Observability()
         self.fns = ServeFns(cfg, slots_per_replica, max_len, impl=impl)
         self.scheduler = Scheduler(max_pending=max_pending,
                                    max_retries=max_retries)
@@ -76,7 +82,8 @@ class ServeEngine:
         if fault_tolerant:
             self.monitor = HeartbeatMonitor(
                 num_replicas, period=heartbeat_period,
-                timeout_factor=heartbeat_timeout_factor).start()
+                timeout_factor=heartbeat_timeout_factor,
+                obs=self.obs).start()
         sentinel_factory = None
         if sentinel:
             # hard ceiling just under uniform: a replica corrupt from the
@@ -91,7 +98,18 @@ class ServeEngine:
         for _ in range(num_replicas):
             self.router.add_replica(params)
         self.engine_step = 0
-        self.events: List[Dict[str, Any]] = []
+
+    @property
+    def events(self) -> List[Dict[str, Any]]:
+        """Back-compat view of the engine's event history, reconstructed
+        from the obs bus ("serve" subsystem): the same ``{"t", "step",
+        "event", ...}`` dicts the old capped list held, bounded by the
+        bus ring (DEFAULT_CAPACITY = the scheduler's 10k observability
+        cap)."""
+        return [{"t": e.t_mono, "step": e.data.get("step"),
+                 "event": e.kind,
+                 **{k: v for k, v in e.data.items() if k != "step"}}
+                for e in self.obs.events(subsystem="serve")]
 
     # ------------------------------------------------------------------
     # client surface
@@ -169,6 +187,10 @@ class ServeEngine:
             except CorruptionDetected as e:
                 self._fail(rep, f"sentinel:{e.detail}")
         self.engine_step += 1
+        reg = self.obs.registry
+        reg.gauge("serve.queue_depth").set(self.scheduler.pending())
+        reg.gauge("serve.in_flight").set(len(self.scheduler.in_flight()))
+        reg.gauge("serve.healthy_replicas").set(len(healthy))
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
         """Drive ``step`` until every request is DONE (or FAILED past its
@@ -198,9 +220,9 @@ class ServeEngine:
     # internals
     # ------------------------------------------------------------------
     def _record(self, event: str, **kw) -> None:
-        self.events.append({"t": time.perf_counter(), "step":
-                            self.engine_step, "event": event, **kw})
-        _trim(self.events)   # bounded observability under sustained traffic
+        # bounded observability under sustained traffic: the bus ring caps
+        # retention exactly like the old _trim'd list did
+        self.obs.emit("serve", event, step=self.engine_step, **kw)
 
     def _drain_detected(self) -> None:
         for rid in self.router.take_detected():
@@ -208,14 +230,20 @@ class ServeEngine:
             self._fail(rep, "heartbeat-timeout")
 
     def _fail(self, rep: Replica, reason: str) -> None:
+        t0 = time.perf_counter()
         drained = self.router.fail_replica(rep, reason)
         # requeue in REVERSE slot order: each requeue prepends, so the
         # reversed walk leaves the queue front in slot (= admission) order
         for r in reversed(drained):
             # requeue clears t_first_token: the retry restamps the stream
             self.scheduler.requeue(self.scheduler.requests[r])
+        drain_s = time.perf_counter() - t0
         self._record("replica_failed", replica=rep.id, reason=reason,
                      drained=len(drained))
+        reg = self.obs.registry
+        reg.histogram("serve.failover_drain_ms").observe(drain_s * 1e3)
+        reg.counter("serve.replica_failures").inc()
+        reg.counter("serve.requests_drained").inc(len(drained))
         if self.router.standby_count:
             standby = self.router.activate_standby()
             if standby is not None:
@@ -240,6 +268,13 @@ class ServeEngine:
             rep.pool.write_row(slot, row)
             self.scheduler.start_decode(req, tok0)
             req.t_first_token = time.perf_counter()
+            self.obs.registry.histogram("serve.ttft_ms").observe(
+                (req.t_first_token - req.t_submit) * 1e3)
+            if req.retries > 0:
+                # a drained request's retry produced its first client-
+                # visible token: the failover incident is repaired
+                self._record("retry_first_token", rid=req.rid,
+                             retries=req.retries)
             admitted += 1
             if req.remaining == 0:       # max_new_tokens == 1
                 self._finish(rep, req, slot)
@@ -267,6 +302,7 @@ class ServeEngine:
                 raise CorruptionDetected(self.engine_step,
                                          "decode-sentinel", reason)
         now = time.perf_counter()
+        self.obs.registry.counter("serve.tokens").inc(len(active))
         for slot in active:
             req = self.scheduler.requests[rep.pool.owner(slot)]
             done = self.scheduler.append_token(req, int(toks[slot]))
@@ -278,3 +314,6 @@ class ServeEngine:
         self.scheduler.finish(req)
         rep.pool.release(slot)
         req.t_done = time.perf_counter() if now is None else now
+        self.obs.registry.histogram("serve.latency_ms").observe(
+            (req.t_done - req.t_submit) * 1e3)
+        self.obs.registry.counter("serve.requests_done").inc()

@@ -538,6 +538,7 @@ from repro.core import (Dependability, DependabilityConfig, HeartbeatEmitter)
 from repro.data import ShardedPipeline
 from repro.launch.mesh import host_device_map
 from repro.models import get_config
+from repro.obs import Observability, Timeline, load_jsonl, to_scenario
 from repro.sdc.checksum import named_leaves
 from repro.sharding.api import resolve
 from repro.sharding.rules import state_specs
@@ -580,7 +581,13 @@ def test_e2e_elastic_compound_scenario(tmp_path):
     at step 6, seeded SDC flips land (scrub-detected, rolled back via
     run_scenario_elastic's re-entry on the survivor set), the rack heals
     at step 16 — and the merged trajectory still matches an uninterrupted
-    single-device run step for step."""
+    single-device run step for step.
+
+    The run records its telemetry to JSONL; afterwards the log must (a)
+    convert back into the *same* Scenario via ``to_scenario`` (the
+    record-and-replay acceptance criterion, replayed here through the
+    control-plane simulator with invariants green) and (b) yield a
+    failure timeline whose incidents closed."""
     out = _run(f"""
     import os
     STEPS = 20
@@ -603,6 +610,8 @@ def test_e2e_elastic_compound_scenario(tmp_path):
         heartbeat_timeout_factor=5.0, signal_detection=False,
         scrub=True, scrub_fraction=1.0,
         monitor_hosts=4), host_id=0, num_hosts=1).start()
+    jsonl = os.path.join(r"{tmp_path}", "events.jsonl")
+    dep.attach_obs(Observability(jsonl_path=jsonl))
     ems = {{h: HeartbeatEmitter(h, dep.monitor.addr, PERIOD).start()
            for h in (1, 2, 3)}}
     ems[0] = dep.emitter                     # host 0 beats from dep itself
@@ -639,10 +648,33 @@ def test_e2e_elastic_compound_scenario(tmp_path):
             check_no_dead_growth(
                 [(s, hs) for s, hs in grown],
                 {{2: [(6.0, 16.0)], 3: [(6.0, 16.0)]}})])
+
+    # record-and-replay: freeze the JSONL log, reconstruct the scenario
+    # from it (declarative chaos events -> lossless), and replay the
+    # reconstruction through the control-plane simulator
+    dep.obs.close()
+    rec = load_jsonl(jsonl)
+    back = to_scenario(rec)
+    assert back.to_dict() == sc.to_dict(), "round-trip scenario drifted"
+    assert back.seed == sc.seed and back.clock == "step"
+    from repro.chaos import ControlPlaneSim
+    simrep = ControlPlaneSim(4, devices_per_host=2, model_axis=2).run(back)
+    verify(simrep.invariants)
+    assert {{d["host"] for d in simrep.detections}} == {{2, 3}}
+
+    # failure timeline: the rack loss + storm incidents all closed, so
+    # MTTR and availability are well-defined measured numbers
+    tl = Timeline.from_events(rec)
+    s = tl.summary()
+    assert s["incidents"] >= 1 and s["closed"] == s["incidents"], s
+    assert s["mttr_s"] > 0 and s["availability"] < 1.0, s
+    assert "heartbeat.failure" in s["causes"], s
+
     for em in ems.values():
         em.stop()
     dep.stop()
     print("compound elastic OK: rollbacks=", info["rollbacks"],
-          "events=", kinds)
+          "events=", kinds, "mttr=%.2fs" % s["mttr_s"],
+          "availability=%.3f" % s["availability"])
     """, devices=8)
     assert "compound elastic OK" in out
