@@ -14,9 +14,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_chaos, bench_checkpoint, bench_heartbeat,
-                            bench_kernels, bench_obs, bench_overhead_fwi,
-                            bench_sdc, bench_serve, bench_throughput)
+    from benchmarks import (bench_chaos, bench_checkpoint, bench_elastic,
+                            bench_heartbeat, bench_kernels, bench_obs,
+                            bench_overhead_fwi, bench_sdc, bench_serve,
+                            bench_throughput)
     suites = [
         ("overhead_fwi", "overhead_fwi (paper Fig.1-2, eq.2-3)",
          bench_overhead_fwi.main),
@@ -29,6 +30,8 @@ def main() -> None:
         ("serve", "serving engine (docs/serving.md)", bench_serve.main),
         ("chaos", "chaos scenario replay (docs/chaos.md)",
          bench_chaos.main),
+        ("elastic", "3D mesh reshard latency (docs/elastic.md)",
+         bench_elastic.main),
         ("obs", "telemetry overhead (docs/observability.md)",
          bench_obs.main),
     ]
@@ -55,6 +58,7 @@ def main() -> None:
                          ("BENCH_SDC_JSON", "BENCH_sdc.json"),
                          ("BENCH_SERVE_JSON", "BENCH_serve.json"),
                          ("BENCH_CHAOS_JSON", "BENCH_chaos.json"),
+                         ("BENCH_ELASTIC_JSON", "BENCH_elastic.json"),
                          ("BENCH_OBS_JSON", "BENCH_obs.json")):
         json_path = os.environ.get(env, default)
         if os.path.exists(json_path):  # written by the owning bench module

@@ -24,6 +24,9 @@ test -f tests/test_chaos.py
 # and the telemetry suite (tests/test_obs.py: bus/metrics/timeline units
 # + the record-and-replay round trip)
 test -f tests/test_obs.py
+# and the elastic 3D mesh suite (tests/test_elastic_3d.py: grid/MoE
+# degradation/sim units + the (2,2,2) host-kill E2E, marked `slow`)
+test -f tests/test_elastic_3d.py
 ARGS=()
 for a in "$@"; do
   if [ "$a" = "--fast" ]; then

@@ -42,7 +42,8 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.chaos import invariants as inv
 from repro.chaos.scenario import Scenario, ScenarioError
-from repro.core.elastic import NoSurvivorsError, largest_grid
+from repro.core.elastic import (MeshSpec, NoSurvivorsError, best_grid3d,
+                                largest_grid)
 from repro.core.policy import CheckpointPolicy, SystemModel, young_daly_period
 
 
@@ -120,6 +121,7 @@ class ControlPlaneSim:
                  timeout_factor: float = 5.0,
                  devices_per_host: int = 1,
                  model_axis: int = 1,
+                 mesh_spec: Optional[MeshSpec] = None,
                  monitor_host: int = 0,
                  stale_in_flight: int = 3,
                  stale_delay_ticks: int = 2,
@@ -136,6 +138,11 @@ class ControlPlaneSim:
         self.timeout = timeout_factor * period
         self.devices_per_host = devices_per_host
         self.model_axis = model_axis
+        # 3D mode: mesh selection runs the real best_grid3d factorization
+        # (legal tp widths, ep | experts, ep -> dp -> tp degradation) and
+        # every host gets (dp, tp, ep) coordinates — the 1000-host traces
+        # validate the same shrink protocol run_elastic executes on devices
+        self.mesh_spec = mesh_spec
         self.monitor_host = monitor_host
         self.stale_in_flight = stale_in_flight
         self.stale_delay_ticks = stale_delay_ticks
@@ -145,6 +152,44 @@ class ControlPlaneSim:
         self.base_rate = base_rate
         self.slots_per_host = slots_per_host
         self.service_ticks = service_ticks
+
+    # ------------------------------------------------------------------
+    # axis-aware host coordinates (3D mode)
+    # ------------------------------------------------------------------
+    def host_coords(self, members=None) -> Dict[int, Tuple[int, int, int]]:
+        """host id -> (data, model, expert) coordinate of its FIRST device
+        under the current members' best legal grid.  Placement matches
+        ``core.elastic.survivor_mesh3d`` exactly — expert-major, hosts own
+        contiguous device ranges — so a trace replayed here excludes the
+        same expert slice the device-backed loop would.  Hosts whose
+        devices fall off the grid (n not a multiple of dp*tp*ep) map to
+        no coordinate and are omitted."""
+        if self.mesh_spec is None:
+            raise ValueError("host_coords requires mesh_spec (3D mode)")
+        live = sorted(range(self.num_hosts) if members is None else members)
+        n = len(live) * self.devices_per_host
+        dp, tp, ep = best_grid3d(n, self.mesh_spec)
+        out: Dict[int, Tuple[int, int, int]] = {}
+        for pos, h in enumerate(live):
+            v = pos * self.devices_per_host      # first device's flat index
+            if v >= dp * tp * ep:
+                continue
+            k, rem = divmod(v, dp * tp)
+            i, j = divmod(rem, tp)
+            out[h] = (i, j, k)
+        return out
+
+    def _legal_grid_entry(self, m: Dict) -> bool:
+        spec = self.mesh_spec
+        dp, tp, ep = m["dp"], m["mp"], m.get("ep", 1)
+        n = m["members"] * self.devices_per_host
+        if dp * tp * ep > n or min(dp, tp, ep) < 1:
+            return False
+        if spec.legal_model is not None and tp not in spec.legal_model:
+            return False
+        if spec.num_experts and spec.num_experts % ep:
+            return False
+        return tp <= spec.model and ep <= max(spec.expert, 1)
 
     # ------------------------------------------------------------------
     # clock
@@ -224,9 +269,13 @@ class ControlPlaneSim:
 
         def record_mesh(now: float) -> None:
             n = len(members) * self.devices_per_host
-            dp, mp = largest_grid(n, self.model_axis)
+            if self.mesh_spec is not None:
+                dp, mp, ep = best_grid3d(n, self.mesh_spec)
+            else:
+                dp, mp = largest_grid(n, self.model_axis)
+                ep = 1
             mesh_history.append({"t": now, "members": len(members),
-                                 "dp": dp, "mp": mp})
+                                 "dp": dp, "mp": mp, "ep": ep})
             policy.system.num_nodes = len(members)
 
         def dropped_by_partition(h: int, tick: int) -> bool:
@@ -387,6 +436,14 @@ class ControlPlaneSim:
                   inv.check_monotonic_drain(drained_series)]
         if samples:
             checks.append(inv.check_conservation(samples))
+        if self.mesh_spec is not None:
+            bad = [m for m in mesh_history
+                   if not self._legal_grid_entry(m)]
+            checks.append(inv.InvariantResult(
+                "legal-3d-grid", not bad,
+                (f"{len(bad)} illegal grids: {bad[:3]}" if bad else
+                 f"{len(mesh_history)} grids legal under "
+                 f"(tp|heads, ep|experts)")))
         if not self.cadence_tolerated(cadence):
             checks.append(inv.InvariantResult(
                 "young-daly-cadence", False,

@@ -7,13 +7,19 @@ from repro.core.codec import CODECS, DeviceCodec, Int8BlockCodec
 from repro.core.coordinator import run_bsp, run_with_recovery
 from repro.core.io_engine import ShardIOEngine, crc32_array, write_npy
 from repro.core.elastic import (
+    MeshSpec,
+    NoLegalGridError,
     NoSurvivorsError,
+    best_grid3d,
+    dp_width,
     largest_grid,
     rescale_global_batch,
+    rescale_global_batch_for_mesh,
     reshard_state,
     survivor_mesh,
+    survivor_mesh3d,
 )
-from repro.core.elastic_loop import MeshEvent, run_elastic
+from repro.core.elastic_loop import DegradedExperts, MeshEvent, run_elastic
 from repro.core.failures import (CorruptionDetected, FaultInjector,
                                  SimulatedFailure, StragglerWatchdog, flip_bit)
 from repro.core.heartbeat import HeartbeatEmitter, HeartbeatMonitor
@@ -35,10 +41,17 @@ __all__ = [
     "run_with_recovery",
     "run_elastic",
     "MeshEvent",
+    "DegradedExperts",
     "NoSurvivorsError",
+    "NoLegalGridError",
+    "MeshSpec",
     "survivor_mesh",
+    "survivor_mesh3d",
+    "best_grid3d",
+    "dp_width",
     "reshard_state",
     "rescale_global_batch",
+    "rescale_global_batch_for_mesh",
     "largest_grid",
     "CorruptionDetected",
     "FaultInjector",

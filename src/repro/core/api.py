@@ -135,6 +135,9 @@ class Dependability:
             if config.sentinel else None)
         self.verified_steps: set = set()      # saved while scrub-clean
         self.last_restore_skipped: list = []
+        # the (dp, tp, ep) grid the state is currently sharded on; recorded
+        # into every manifest (run_elastic keeps it current across resizes)
+        self.mesh_meta: Optional[dict] = None
         self.signals: Optional[TerminationSignal] = None
         self.monitor: Optional[HeartbeatMonitor] = None
         self.emitter: Optional[HeartbeatEmitter] = None
@@ -309,7 +312,11 @@ class Dependability:
                   if hasattr(self._local_provider, "shard_state_dicts")
                   else None)
         t0 = time.perf_counter()
+        # mesh_meta: set by run_elastic (or the caller) so the manifest
+        # records the (dp, tp, ep) grid + expert placement the state was
+        # sharded on — restore onto a different grid reads it back
         stats = self.manager.save(step, state, local, local_shards=shards,
+                                  mesh_meta=getattr(self, "mesh_meta", None),
                                   blocking=blocking)
         cost = time.perf_counter() - t0  # on-critical-path cost
         # delta mode: feed the kind along so the policy amortizes cheap

@@ -468,12 +468,17 @@ class CheckpointManager:
 
     def save(self, step: int, state, local_state: Optional[Dict] = None, *,
              local_shards: Optional[List[Dict]] = None,
+             mesh_meta: Optional[Dict] = None,
              blocking: bool = True) -> SaveStats:
         """``local_state``: this host's local-scope dict (one file per host).
         ``local_shards``: finer-grained local scope — one dict per DP shard
         this host owns, each written as its OWN ``local_s<k>.json`` file so
         restore can remap them individually when the shard count changes
-        (the feature the paper's FWI study could not enable)."""
+        (the feature the paper's FWI study could not enable).
+        ``mesh_meta``: the mesh the state was sharded on when saved — e.g.
+        ``{"dp": 2, "tp": 2, "ep": 2, "moe_ep": 2, "dead_experts": []}`` —
+        recorded in the manifest so restore can rebuild expert placement
+        (``reshard_state`` reads it back via ``manifest_meta``)."""
         self.wait()  # double-buffer: drain previous async write
         t0 = time.perf_counter()
         kind = "full"
@@ -505,6 +510,8 @@ class CheckpointManager:
                     "kind": kind,
                     "arrays": manifest_arrays,
                 }
+                if mesh_meta is not None:
+                    manifest["mesh"] = dict(mesh_meta)
                 if local_shards is not None:
                     manifest["local_shards"] = [int(sd.get("shard", k))
                                                 for k, sd in
@@ -640,6 +647,19 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def manifest_meta(self, step: int) -> Optional[Dict[str, Any]]:
+        """The ``mesh_meta`` dict recorded at ``save`` time (None when the
+        step predates mesh metadata or does not exist).  This is how expert
+        placement survives a restart: the manifest says which (dp, tp, ep)
+        grid — and which dead experts — the checkpoint was written under."""
+        if step is None:
+            return None
+        p = os.path.join(self._final(step), "manifest_h0.json")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return json.load(f).get("mesh")
 
     def _load_manifests(self, step: int) -> Dict[str, Any]:
         final = self._final(step)

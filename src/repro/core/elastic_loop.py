@@ -27,6 +27,7 @@ pausing an emitter is a fail-stop, resuming it is a rejoin.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -34,7 +35,9 @@ import jax
 
 from repro.core.api import Dependability
 from repro.core.coordinator import run_bsp
-from repro.core.elastic import NoSurvivorsError, largest_grid, survivor_mesh
+from repro.core.elastic import (MeshSpec, NoSurvivorsError, best_grid3d,
+                                dp_width, largest_grid, mesh_axis_sizes,
+                                survivor_mesh, survivor_mesh3d)
 from repro.sharding.api import mesh_context
 
 
@@ -45,10 +48,31 @@ class MeshEvent:
     hosts: Tuple[int, ...]    # hosts lost (shrink) or rejoined (grow)
     step: int                 # superstep the event interrupted
     dp: int                   # data-parallel width AFTER the event
+    tp: int = 1               # model width AFTER the event (3D meshes)
+    ep: int = 1               # expert width AFTER the event (3D meshes)
+
+    def as_record(self) -> Dict:
+        tail = (f":tp={self.tp}:ep={self.ep}"
+                if (self.tp, self.ep) != (1, 1) else "")
+        return {"step": self.step, "event":
+                f"{self.kind}:{','.join(map(str, self.hosts))}"
+                f":dp={self.dp}{tail}"}
+
+
+@dataclasses.dataclass
+class DegradedExperts:
+    """Graceful expert degradation: a host failure broke an expert slice
+    and the router was renormalized over the survivors instead of aborting
+    (see ``layers.moe.moe_apply``'s ``dead_experts``).  Emitted on the obs
+    bus as ``elastic/degraded_experts``."""
+    experts: Tuple[int, ...]  # expert ids newly lost (original numbering)
+    step: int                 # superstep the loss interrupted
+    live: int                 # experts still routable AFTER the loss
 
     def as_record(self) -> Dict:
         return {"step": self.step, "event":
-                f"{self.kind}:{','.join(map(str, self.hosts))}:dp={self.dp}"}
+                f"degraded_experts:{','.join(map(str, self.experts))}"
+                f":live={self.live}"}
 
 
 class _HostLatch:
@@ -84,6 +108,8 @@ def run_elastic(dep: Dependability, make_step: Callable, state, data,
                 host_devices: Dict[int, Sequence[Any]],
                 initial_hosts: Optional[Sequence[int]] = None,
                 model_axis: int = 1,
+                mesh_spec: Optional[MeshSpec] = None,
+                degrade_experts: bool = False,
                 like=None,
                 shardings_fn: Optional[Callable] = None,
                 allow_grow: bool = True,
@@ -95,8 +121,22 @@ def run_elastic(dep: Dependability, make_step: Callable, state, data,
     """Train to ``num_steps`` surviving host failures and rejoins.
 
     - ``make_step(mesh)`` -> train_step callable compiled for that mesh.
+      With ``degrade_experts`` the callable may take a second argument —
+      ``make_step(mesh, dead_experts)`` — receiving the tuple of lost
+      expert ids (thread it into the model config's ``dead_experts``).
+      ``shardings_fn`` gets the same optional second argument.
     - ``host_devices``: host id -> the devices that host owns; a failed
       host removes its whole group from the mesh.
+    - ``mesh_spec``: switches to 3D (data, model, expert) meshes — the
+      survivor grid is the best legal (dp, tp, ep) factorization
+      (``survivor_mesh3d``, degradation priority ep -> dp -> tp) and the
+      checkpoint reshards across ALL three axes.  ``None`` keeps the
+      original 2D (data, model) path.
+    - ``degrade_experts``: instead of re-gathering every expert from the
+      checkpoint after a failure, drop the experts whose slice the dead
+      host broke and renormalize the router over the survivors (masked
+      top-k, see ``layers.moe``) — continue degraded rather than pay the
+      full reshard.  Each loss is a :class:`DegradedExperts` event.
     - ``like``: template pytree for elastic restore (defaults to the
       registered global template).
     - ``shardings_fn(mesh)`` -> shardings pytree for the state on that
@@ -144,7 +184,8 @@ def run_elastic(dep: Dependability, make_step: Callable, state, data,
         return _drive(dep, make_step, state, data, num_steps, monitor,
                       fail_latch, rejoin_latch, stop_for_grow,
                       host_devices=host_devices, initial_hosts=initial_hosts,
-                      model_axis=model_axis,
+                      model_axis=model_axis, mesh_spec=mesh_spec,
+                      degrade_experts=degrade_experts,
                       like=like, shardings_fn=shardings_fn,
                       allow_grow=allow_grow, max_events=max_events,
                       fault_injector=fault_injector, on_metrics=on_metrics,
@@ -157,22 +198,78 @@ def run_elastic(dep: Dependability, make_step: Callable, state, data,
         dep.on_host_rejoin = prev_on_rejoin
 
 
+def _accepts_dead(fn) -> bool:
+    """True when ``fn`` takes a second positional arg (the dead-experts
+    tuple) — lets make_step/shardings_fn opt in without breaking the
+    single-argument signature every existing caller uses."""
+    try:
+        params = list(inspect.signature(fn).parameters.values())
+    except (TypeError, ValueError):
+        return False
+    positional = [p for p in params if p.kind in
+                  (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    return len(positional) >= 2 or any(p.kind == p.VAR_POSITIONAL
+                                       for p in params)
+
+
+def _broken_expert_slices(mesh, lost_devices) -> List[int]:
+    """Expert coordinates of ``mesh`` whose device slice lost a member.
+    An expert slice fails AS A UNIT: one dead device breaks the whole
+    slice (the survivors hold only fragments of its experts)."""
+    axes = mesh_axis_sizes(mesh)
+    ep = int(axes.get("expert", 1))
+    if ep <= 1:
+        return []          # experts replicated or no expert axis: no loss
+    grid = mesh.devices
+    lost = set(lost_devices)
+    return [k for k in range(ep)
+            if any(d in lost for d in grid[..., k].ravel())]
+
+
 def _drive(dep, make_step, state, data, num_steps, monitor, fail_latch,
            rejoin_latch, stop_for_grow, *, host_devices, initial_hosts,
-           model_axis, like, shardings_fn, allow_grow, max_events,
-           fault_injector, on_metrics, on_event) -> Tuple[Any, Dict]:
+           model_axis, mesh_spec, degrade_experts, like, shardings_fn,
+           allow_grow, max_events, fault_injector, on_metrics,
+           on_event) -> Tuple[Any, Dict]:
     events: List[MeshEvent] = []
     all_history: List[Dict] = []
     active = sorted(host_devices if initial_hosts is None else initial_hosts)
     first = True
+    spec = mesh_spec
+    total_experts = spec.num_experts if spec is not None else 0
+    dead_experts: set = set()
+
+    def grid_of(n: int) -> Tuple[int, int, int]:
+        if spec is not None:
+            return best_grid3d(n, spec)
+        d, _m = largest_grid(n, model_axis)
+        return (d, 1, 1)
+
+    def call_meshed(fn, mesh):
+        if fn is None:
+            return None
+        if degrade_experts and _accepts_dead(fn):
+            return fn(mesh, tuple(sorted(dead_experts)))
+        return fn(mesh)
+
     while True:
         devices = [d for h in active for d in host_devices[h]]
-        mesh = survivor_mesh(devices, model_axis=model_axis)
-        dp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+        if spec is not None:
+            mesh = survivor_mesh3d(devices, spec)
+        else:
+            mesh = survivor_mesh(devices, model_axis=model_axis)
+        axes = mesh_axis_sizes(mesh)
+        dp = dp_width(mesh)
+        tp, ep = int(axes.get("model", 1)), int(axes.get("expert", 1))
+        # record the grid the next save will be sharded on, so a restart
+        # (or reshard_state) can rebuild expert placement from the manifest
+        dep.mesh_meta = {"dp": dp, "tp": tp, "ep": ep,
+                         "moe_ep": ep if spec is not None else False,
+                         "dead_experts": sorted(dead_experts)}
         if hasattr(data, "repartition"):
             data.repartition(dp)
-        shardings = shardings_fn(mesh) if shardings_fn is not None else None
-        train_step = make_step(mesh)
+        shardings = call_meshed(shardings_fn, mesh)
+        train_step = call_meshed(make_step, mesh)
         with mesh_context(mesh):
             if first:
                 if shardings is not None:
@@ -185,11 +282,16 @@ def _drive(dep, make_step, state, data, num_steps, monitor, fail_latch,
                 # (the pipeline already has its new width)
                 state, got = dep.restore_latest(like=like,
                                                 shardings=shardings)
+                tail = (f":tp={tp}:ep={ep}" if spec is not None else "")
                 all_history.append({"step": got,
-                                    "event": f"resume:dp={dp}"})
+                                    "event": f"resume:dp={dp}{tail}"})
                 if dep.obs is not None:
-                    dep.obs.emit("elastic", "resume", step=got, dp=dp)
+                    dep.obs.emit("elastic", "resume", step=got, dp=dp,
+                                 tp=tp, ep=ep)
                     dep.obs.registry.gauge("elastic.dp_width").set(dp)
+                    if spec is not None:
+                        dep.obs.registry.gauge("elastic.tp_width").set(tp)
+                        dep.obs.registry.gauge("elastic.ep_width").set(ep)
             state, status, hist = run_bsp(
                 dep, train_step, state, data, num_steps,
                 fault_injector=fault_injector, on_metrics=on_metrics,
@@ -211,6 +313,35 @@ def _drive(dep, make_step, state, data, num_steps, monitor, fail_latch,
         if failed:
             for h in failed:
                 monitor.acknowledge(h)   # handled: stop flagging it
+            if degrade_experts and spec is not None:
+                # the dead host broke its expert slice: drop that slice's
+                # experts (original ids; live ones split contiguously over
+                # the CURRENT mesh's expert coords) and renormalize the
+                # router instead of re-gathering them from the checkpoint
+                lost_devs = [d for h in failed if h in host_devices
+                             for d in host_devices[h]]
+                broken = _broken_expert_slices(mesh, lost_devs)
+                if broken:
+                    live_ids = [e for e in range(total_experts)
+                                if e not in dead_experts]
+                    per = len(live_ids) // max(ep, 1)
+                    newly = sorted(e for k in broken
+                                   for e in live_ids[k * per:(k + 1) * per])
+                    still = len(live_ids) - len(newly)
+                    if still <= 0:
+                        raise NoSurvivorsError(
+                            f"every expert slice broke at step {cur}: "
+                            f"experts {newly} all lost")
+                    dead_experts.update(newly)
+                    spec = spec.with_experts(still)
+                    degraded = DegradedExperts(tuple(newly), cur, still)
+                    all_history.append(degraded.as_record())
+                    if dep.obs is not None:
+                        dep.obs.emit("elastic", "degraded_experts",
+                                     experts=list(degraded.experts),
+                                     step=cur, live=still)
+                        dep.obs.registry.gauge(
+                            "elastic.live_experts").set(still)
             # a concurrent rejoin still counts (it just rides the same
             # mesh rebuild instead of its own grow event)
             active = sorted(set(active) | set(rejoined))
@@ -220,12 +351,12 @@ def _drive(dep, make_step, state, data, num_steps, monitor, fail_latch,
                 raise NoSurvivorsError(
                     f"all hosts failed at step {cur}: {sorted(failed)}")
             event = MeshEvent("shrink", tuple(failed), cur,
-                              largest_grid(len(survivors), model_axis)[0])
+                              *grid_of(len(survivors)))
         elif rejoined:
             active = sorted(set(active) | set(rejoined))
             grown = [d for h in active for d in host_devices[h]]
             event = MeshEvent("grow", tuple(rejoined), cur,
-                              largest_grid(len(grown), model_axis)[0])
+                              *grid_of(len(grown)))
         elif status.startswith("paused:"):
             # stale rejoin notification (host already active): keep going
             continue
@@ -237,7 +368,8 @@ def _drive(dep, make_step, state, data, num_steps, monitor, fail_latch,
         events.append(event)
         if dep.obs is not None:
             dep.obs.emit("elastic", event.kind, hosts=list(event.hosts),
-                         step=event.step, dp=event.dp)
+                         step=event.step, dp=event.dp, tp=event.tp,
+                         ep=event.ep)
             dep.obs.registry.counter(f"elastic.{event.kind}s").inc()
         if len(events) > max_events:
             # over the cap: record the event but do NOT process it (no

@@ -27,11 +27,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh_compat(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1, axis_names=("data", "model")):
-    """Small mesh over whatever devices exist (tests / examples)."""
+def make_host_mesh(data: int = 1, model: int = 1, expert: int = 0,
+                   axis_names=None):
+    """Small mesh over whatever devices exist (tests / examples).
+
+    ``expert > 0`` grows a third "expert" axis — the 3D (data, model,
+    expert) meshes MoE configs train on; the default stays 2D so existing
+    callers are unchanged."""
     n = len(jax.devices())
+    if expert:
+        assert data * model * expert <= n, (data, model, expert, n)
+        return make_mesh_compat(
+            (data, model, expert), axis_names or ("data", "model", "expert"))
     assert data * model <= n, (data, model, n)
-    return make_mesh_compat((data, model), axis_names)
+    return make_mesh_compat((data, model), axis_names or ("data", "model"))
 
 
 def host_device_map(num_hosts: int, devices=None):

@@ -2,7 +2,7 @@ from repro.layers.norms import rms_norm
 from repro.layers.rope import apply_rope, apply_mrope
 from repro.layers.attention import mha, decode_mha
 from repro.layers.mlp import mlp_apply, mlp_init
-from repro.layers.moe import moe_apply, moe_init
+from repro.layers.moe import drop_experts, moe_apply, moe_init, router_probs
 
 __all__ = [
     "rms_norm",
@@ -14,4 +14,6 @@ __all__ = [
     "mlp_init",
     "moe_apply",
     "moe_init",
+    "drop_experts",
+    "router_probs",
 ]

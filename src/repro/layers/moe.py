@@ -40,9 +40,50 @@ def _capacity(tokens: int, num_experts: int, k: int, cf: float) -> int:
     return max(int(c), 1)
 
 
+def router_probs(logits, num_experts: int, dead_experts=()):
+    """Router distribution over experts; (..., E) logits -> (..., E) probs.
+
+    With ``dead_experts`` the softmax runs on the COMPACTED live columns
+    and scatters back (not a -inf mask over all E): that keeps the
+    reduction order identical to a model holding just the survivor
+    experts, so degraded routing is bit-exact vs ``drop_experts`` — dead
+    experts get exactly zero mass either way."""
+    dead = tuple(sorted({int(e) for e in dead_experts}))
+    if not dead:
+        return jax.nn.softmax(logits, axis=-1)
+    live_idx = jnp.asarray([e for e in range(num_experts)
+                            if e not in dead])
+    sub = jax.nn.softmax(logits[..., live_idx], axis=-1)
+    return jnp.zeros_like(logits).at[..., live_idx].set(sub)
+
+
+def drop_experts(params, dead_experts):
+    """Physically remove lost experts: slice their router columns and weight
+    rows out.  Running the result with the survivor expert count is
+    bit-identical to running the full model with ``dead_experts`` masked in
+    ``moe_apply`` — masking is the zero-copy fast path after a failure,
+    dropping is the compaction that reclaims the memory."""
+    dead = set(int(e) for e in dead_experts)
+    num = params["router"].shape[1]
+    keep = jnp.asarray([e for e in range(num) if e not in dead])
+    return {
+        "router": params["router"][:, keep],
+        "w_in": params["w_in"][keep],
+        "w_gate": params["w_gate"][keep],
+        "w_out": params["w_out"][keep],
+    }
+
+
 def moe_apply(params, x, *, num_experts: int, k: int, capacity_factor: float,
-              act, compute_dtype, ep: bool = False):
-    """x: (B, S, D) -> (B, S, D).  Aux loss returned for load balancing."""
+              act, compute_dtype, ep: bool = False, dead_experts=()):
+    """x: (B, S, D) -> (B, S, D).  Aux loss returned for load balancing.
+
+    ``dead_experts`` (a STATIC tuple of expert ids — it shapes capacity) is
+    graceful degradation after an expert slice dies: the softmax runs over
+    the surviving columns only, so the router renormalizes over the
+    survivors (lost experts get exactly zero mass) and capacity + aux loss
+    are computed from the live count.  The live expert path is bit-exact
+    vs a model holding just the survivor experts (see ``drop_experts``)."""
     B, S, D = x.shape
     decode = S == 1
     if decode:
@@ -50,18 +91,29 @@ def moe_apply(params, x, *, num_experts: int, k: int, capacity_factor: float,
         x = x.reshape(1, B, D)
         B, S = 1, B
     E = num_experts
-    C = _capacity(S, E, k, capacity_factor)
+    dead = tuple(sorted({int(e) for e in dead_experts}))
+    if any(e < 0 or e >= E for e in dead):
+        raise ValueError(f"dead_experts {dead} out of range for E={E}")
+    live = E - len(dead)
+    if live <= 0:
+        raise ValueError(f"all {E} experts dead: nothing to route to")
+    k = min(k, live)
+    C = _capacity(S, live, k, capacity_factor)
 
     router = params["router"].astype(jnp.float32)
     logits = x.astype(jnp.float32) @ router                    # (B,S,E)
-    probs = jax.nn.softmax(logits, axis=-1)
+    probs = router_probs(logits, E, dead)                      # (B,S,E)
     gate_w, gate_i = jax.lax.top_k(probs, k)                   # (B,S,k)
     gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
 
-    # load-balancing auxiliary loss (Switch-style)
+    # load-balancing auxiliary loss (Switch-style, over live experts)
     me = probs.mean(axis=(0, 1))                               # (E,)
     ce = jax.nn.one_hot(gate_i[..., 0], E).mean(axis=(0, 1))
-    aux_loss = E * jnp.sum(me * ce)
+    balance = me * ce
+    if dead:
+        balance = balance[jnp.asarray([e for e in range(E)
+                                       if e not in dead])]
+    aux_loss = live * jnp.sum(balance)
 
     # ---- slot assignment, per batch row ----
     T = S * k

@@ -45,6 +45,9 @@ class ModelConfig:
     num_experts: int = 0
     experts_per_token: int = 0
     capacity_factor: float = 1.25
+    dead_experts: Tuple[int, ...] = ()    # expert ids lost to failures:
+                                          # masked out of routing, capacity
+                                          # computed from the live count
     # --- SSM (mamba-1) ---
     ssm_state: int = 0
     conv_width: int = 4
@@ -92,6 +95,11 @@ class ModelConfig:
             assert self.pad_heads_to % max(self.num_kv_heads, 1) == 0
             return self.pad_heads_to
         return self.num_heads
+
+    @property
+    def live_experts(self) -> int:
+        """Expert count still routable after failures (degraded MoE)."""
+        return self.num_experts - len(self.dead_experts)
 
     @property
     def resolved_dt_rank(self) -> int:

@@ -268,7 +268,8 @@ def _attn_apply(p, x, kind, cfg: ModelConfig, positions, cache=None,
         m, aux = moe_apply(p["moe"], h2, num_experts=cfg.num_experts,
                            k=cfg.experts_per_token,
                            capacity_factor=cfg.capacity_factor,
-                           act=_act(cfg.mlp_act), compute_dtype=cd)
+                           act=_act(cfg.mlp_act), compute_dtype=cd,
+                           dead_experts=cfg.dead_experts)
     else:
         m = mlp_apply(p["mlp"], h2, cfg.mlp_act, cd, impl=proj_impl)
     if cfg.sandwich_norm:

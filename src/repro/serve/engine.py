@@ -51,6 +51,7 @@ def pctl(xs, q: float) -> float:
 class ServeEngine:
     def __init__(self, cfg, params, *, num_replicas: int = 1,
                  slots_per_replica: int = 4, max_len: int = 256,
+                 hosts_per_replica: int = 1,
                  fault_tolerant: bool = False,
                  heartbeat_period: float = 0.05,
                  heartbeat_timeout_factor: float = 5.0,
@@ -78,10 +79,14 @@ class ServeEngine:
                                    max_retries=max_retries)
         self.injector = fault_injector
         self.max_prefill_per_step = max_prefill_per_step
+        hosts_per_replica = max(int(hosts_per_replica), 1)
         self.monitor: Optional[HeartbeatMonitor] = None
         if fault_tolerant:
+            # mesh-aware: a replica sharded over a multi-host tp group
+            # beats under one identity PER host, so the monitor watches
+            # num_replicas * hosts_per_replica hosts
             self.monitor = HeartbeatMonitor(
-                num_replicas, period=heartbeat_period,
+                num_replicas * hosts_per_replica, period=heartbeat_period,
                 timeout_factor=heartbeat_timeout_factor,
                 obs=self.obs).start()
         sentinel_factory = None
@@ -94,7 +99,8 @@ class ServeEngine:
                 abs_max_entropy=ceiling)
         self.router = ReplicaRouter(self.fns, self.monitor,
                                     heartbeat_period=heartbeat_period,
-                                    sentinel_factory=sentinel_factory)
+                                    sentinel_factory=sentinel_factory,
+                                    hosts_per_replica=hosts_per_replica)
         for _ in range(num_replicas):
             self.router.add_replica(params)
         self.engine_step = 0

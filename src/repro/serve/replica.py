@@ -14,7 +14,7 @@ decode of in-flight ones (continuous batching).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,13 +51,21 @@ class ServeFns:
 
 class Replica:
     def __init__(self, replica_id: int, params: Any, fns: ServeFns,
-                 sentinel: Optional[DecodeSentinel] = None):
+                 sentinel: Optional[DecodeSentinel] = None,
+                 hosts: Optional[Sequence[int]] = None):
         self.id = replica_id
         self.params = params
         self.fns = fns
         self.pool = CachePool(fns.cfg, fns.num_slots, fns.max_len)
         self.sentinel = sentinel
-        self.emitter: Optional[HeartbeatEmitter] = None
+        # a mesh-aware replica spans several hosts (a tp group sharded over
+        # them): one heartbeat identity PER host, and the replica fails as
+        # a unit when ANY of them dies.  Default: one host = the replica id
+        # (the original single-host behavior, bit-for-bit).
+        self.hosts: Tuple[int, ...] = (tuple(int(h) for h in hosts)
+                                       if hosts is not None
+                                       else (replica_id,))
+        self.emitters: List[HeartbeatEmitter] = []
         self.healthy = True
         self.fail_reason: Optional[str] = None
         self.steps = 0                      # decode steps this replica ran
@@ -65,14 +73,22 @@ class Replica:
     # ------------------------------------------------------------------
     # heartbeat
     # ------------------------------------------------------------------
+    @property
+    def emitter(self) -> Optional[HeartbeatEmitter]:
+        """First host's emitter (back-compat view; pausing it simulates
+        killing ONE host of a multi-host replica)."""
+        return self.emitters[0] if self.emitters else None
+
     def attach_emitter(self, monitor_addr, period: float) -> None:
-        self.emitter = HeartbeatEmitter(self.id, tuple(monitor_addr),
-                                        period=period).start()
+        for h in self.hosts:
+            self.emitters.append(
+                HeartbeatEmitter(h, tuple(monitor_addr),
+                                 period=period).start())
 
     def shutdown(self) -> None:
-        if self.emitter is not None:
-            self.emitter.stop()
-            self.emitter = None
+        for em in self.emitters:
+            em.stop()
+        self.emitters = []
 
     # ------------------------------------------------------------------
     # model steps

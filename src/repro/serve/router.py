@@ -39,14 +39,18 @@ class ReplicaRouter:
                  monitor: Optional[HeartbeatMonitor] = None,
                  heartbeat_period: float = 0.05,
                  sentinel_factory: Optional[Callable[[], DecodeSentinel]]
-                 = None):
+                 = None,
+                 hosts_per_replica: int = 1):
         self.fns = fns
         self.monitor = monitor
         self.heartbeat_period = heartbeat_period
         self.sentinel_factory = sentinel_factory
+        self.hosts_per_replica = max(int(hosts_per_replica), 1)
         self.replicas: Dict[int, Replica] = {}
         self._standby_sources: List[Callable[[], object]] = []
         self._next_id = 0
+        self._next_host = 0              # next unused heartbeat identity
+        self._host_to_rid: Dict[int, int] = {}
         self._lock = threading.Lock()
         self._detected: set = set()      # monitor-thread detections, latched
         self.events: List[Tuple[str, int, str]] = []   # (kind, id, detail)
@@ -63,26 +67,43 @@ class ReplicaRouter:
     def take_detected(self) -> List[int]:
         """Replica ids the monitor declared failed since the last drain,
         plus any currently-failed ids (covers a detection that landed
-        between ``start`` and the first latch wiring)."""
+        between ``start`` and the first latch wiring).
+
+        Detections arrive as HOST ids; a multi-host replica maps every one
+        of its hosts to the same replica id, so losing several hosts of a
+        tp group — or one — surfaces the replica exactly once."""
         with self._lock:
             got, self._detected = set(self._detected), set()
         if self.monitor is not None:
             got |= set(self.monitor.failed_hosts())
-        return sorted(h for h in got
-                      if h in self.replicas and self.replicas[h].healthy)
+        rids = {self._host_to_rid[h] for h in got if h in self._host_to_rid}
+        return sorted(r for r in rids
+                      if r in self.replicas and self.replicas[r].healthy)
 
     # ------------------------------------------------------------------
     # pool membership
     # ------------------------------------------------------------------
-    def add_replica(self, params) -> Replica:
+    def add_replica(self, params,
+                    hosts_per_replica: Optional[int] = None) -> Replica:
+        """``hosts_per_replica > 1``: the replica's params are sharded over
+        a multi-host tp group — it gets that many heartbeat identities and
+        fails over AS A UNIT (one drain) when any of them dies.  Default:
+        the router-wide setting (so activated standbys match too)."""
+        k = (self.hosts_per_replica if hosts_per_replica is None
+             else max(int(hosts_per_replica), 1))
         rid = self._next_id
         self._next_id += 1
+        hosts = tuple(range(self._next_host, self._next_host + k))
+        self._next_host += k
         sentinel = (self.sentinel_factory() if self.sentinel_factory
                     else None)
-        rep = Replica(rid, params, self.fns, sentinel=sentinel)
+        rep = Replica(rid, params, self.fns, sentinel=sentinel, hosts=hosts)
         self.replicas[rid] = rep
+        for h in hosts:
+            self._host_to_rid[h] = rid
         if self.monitor is not None:
-            self.monitor.watch(rid)
+            for h in hosts:
+                self.monitor.watch(h)
             rep.attach_emitter(self.monitor.addr, self.heartbeat_period)
         return rep
 
@@ -103,15 +124,20 @@ class ReplicaRouter:
     # ------------------------------------------------------------------
     def fail_replica(self, rep: Replica, reason: str) -> List[int]:
         """Take a replica out of service; returns the drained rids (slot
-        order).  Idempotent: a replica already failed drains nothing."""
+        order).  Idempotent: a replica already failed drains nothing.
+
+        A multi-host replica fails AS A UNIT: every host's emitter pauses
+        and every host is acknowledged, but the pool drains exactly once —
+        one failover incident, not one per host."""
         if not rep.healthy:
             return []
         rep.healthy = False
         rep.fail_reason = reason
-        if rep.emitter is not None:
-            rep.emitter.pause()          # monitor view must agree: no beats
+        for em in rep.emitters:
+            em.pause()                   # monitor view must agree: no beats
         if self.monitor is not None:
-            self.monitor.acknowledge(rep.id)
+            for h in rep.hosts:
+                self.monitor.acknowledge(h)
         drained = rep.pool.release_all()
         self.events.append(("replica_failed", rep.id,
                             f"{reason};drained={len(drained)}"))

@@ -26,6 +26,29 @@ if TYPE_CHECKING:  # avoid a package-level import cycle (models -> layers ->
 DP_AXES = ("pod", "data")
 FSDP = "data"
 TP = "model"
+EP = "expert"
+
+
+def legal_tp_widths(cfg: "ModelConfig", max_width: int = 0) -> tuple:
+    """Tensor-parallel widths the model reshards to EXACTLY: widths that
+    divide both the (padded) head count and d_ff, so every "model"-sharded
+    dim splits without GSPMD padding and checkpoint spans re-tile exactly
+    across a tp change.  Always contains 1."""
+    heads = cfg.effective_num_heads or 1
+    dff = cfg.d_ff or heads
+    lim = max_width or min(heads, dff)
+    return tuple(w for w in range(1, lim + 1)
+                 if heads % w == 0 and dff % w == 0)
+
+
+def legal_dp_widths(cfg: "ModelConfig", max_width: int = 0) -> tuple:
+    """Data-parallel (FSDP) widths the params reshard to EXACTLY: every
+    FSDP-sharded dim in the spec tables is d_model-sized, so dp must
+    divide d_model for ``device_put`` / checkpoint spans to split without
+    padding.  Always contains 1."""
+    dm = cfg.d_model or 1
+    lim = max_width or dm
+    return tuple(w for w in range(1, min(dm, lim) + 1) if dm % w == 0)
 
 
 def batch_spec(ndim_after_batch: int = 1) -> P:
@@ -66,11 +89,24 @@ def _mlp_specs() -> dict:
     return {"w_in": P(FSDP, TP), "w_gate": P(FSDP, TP), "w_out": P(TP, FSDP)}
 
 
-def _moe_specs(cfg: "ModelConfig", tp_size: int, ep: bool) -> dict:
-    if ep and tp_size and cfg.num_experts % tp_size == 0:
-        e, tp = TP, None
+def _moe_specs(cfg: "ModelConfig", tp_size: int, ep) -> dict:
+    """Expert-weight layout, three modes selected by ``ep``:
+
+    - ``False``: TP inside the experts (hidden dim over "model").
+    - ``True`` (legacy 2D): experts over "model" when E % tp == 0 — the
+      whole model axis is repurposed as expert parallelism.
+    - int >= 1 (3D mesh): experts over the dedicated "expert" axis AND
+      hidden dim over "model" simultaneously.  On a mesh without an
+      "expert" axis the EP entry filters away (sharding.api._filter_axes),
+      degrading to the ``False`` layout — the same specs serve 2D and 3D.
+    """
+    if isinstance(ep, bool):
+        if ep and tp_size and cfg.num_experts % tp_size == 0:
+            e, tp = TP, None
+        else:
+            e, tp = None, TP
     else:
-        e, tp = None, TP
+        e, tp = EP, TP
     return {
         "router": P(None, None),
         "w_in": P(e, FSDP, tp),
@@ -109,7 +145,7 @@ def _rec_specs() -> dict:
 
 
 def layer_specs(cfg: "ModelConfig", kind: str, tp_size: int,
-                moe_ep: bool = False) -> dict:
+                moe_ep=False) -> dict:
     from repro.models.base import FULL, LOCAL, BIDIR, SSM, REC
 
     if kind in (FULL, LOCAL, BIDIR):
@@ -138,7 +174,7 @@ def _prepend(tree, n: int = 1):
                         is_leaf=lambda x: isinstance(x, P))
 
 
-def param_specs(cfg: "ModelConfig", tp_size: int, moe_ep: bool = False) -> dict:
+def param_specs(cfg: "ModelConfig", tp_size: int, moe_ep=False) -> dict:
     """PartitionSpec pytree matching ``model.init``'s parameter pytree."""
     specs: dict = {}
     if not cfg.embedding_inputs:
@@ -188,7 +224,7 @@ def cache_specs(cfg: "ModelConfig", tp_size: int) -> dict:
             "index": P()}
 
 
-def state_specs(cfg: "ModelConfig", tp_size: int, moe_ep: bool = False) -> dict:
+def state_specs(cfg: "ModelConfig", tp_size: int, moe_ep=False) -> dict:
     """Specs for the full TrainState pytree (params + opt moments + scalars)."""
     ps = param_specs(cfg, tp_size, moe_ep)
     return {

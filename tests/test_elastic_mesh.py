@@ -259,3 +259,64 @@ def test_rescale_global_batch_keeps_per_replica_constant():
         rescale_global_batch(30, 8, 6)    # 30 doesn't divide over 8
     with pytest.raises(ValueError):
         rescale_global_batch(32, 8, 0)
+
+
+def test_largest_grid_legal_widths_regression():
+    """Satellite regression: `model = min(model_axis, n)` used to pick a
+    width that divides nothing; the legal-divisor form must degrade to the
+    widest LEGAL divisor and raise a clear error when none exists."""
+    from repro.core import NoLegalGridError, largest_grid
+    # degrade to the largest divisor in the legal set
+    assert largest_grid(8, 4, legal=(1, 2, 4)) == (2, 4)
+    assert largest_grid(6, 4, legal=(1, 2)) == (3, 2)
+    assert largest_grid(5, 4, legal=(1, 2, 4)) == (5, 1)
+    # no legal width divides n -> error, never a silently-broken grid
+    with pytest.raises(NoLegalGridError, match="no legal width divides 5"):
+        largest_grid(5, 4, legal=(2, 4))
+    with pytest.raises(NoLegalGridError):
+        largest_grid(8, 4, legal=())      # empty legal set
+
+
+def test_rescale_global_batch_3d_oracle_sweep():
+    """Satellite oracle: per-replica batch is a function of dp width ONLY.
+    Sweeping (dp, tp, ep) grids, rescaling between any two grids with the
+    same dp is the identity, and between different dp widths preserves the
+    per-replica batch — tp/ep must never leak into the scaling (the
+    total-device-count bug this satellite fixes)."""
+    from repro.core import rescale_global_batch
+    grids = [(dp, tp, ep) for dp in (1, 2, 4, 8)
+             for tp in (1, 2, 4) for ep in (1, 2)]
+    per_replica = 4
+    for (dp0, tp0, ep0) in grids:
+        gb0 = per_replica * dp0
+        for (dp1, tp1, ep1) in grids:
+            got = rescale_global_batch(gb0, dp0, dp1)
+            assert got == per_replica * dp1, ((dp0, tp0, ep0),
+                                              (dp1, tp1, ep1), got)
+            # identity whenever dp is unchanged, whatever tp/ep did
+            if dp0 == dp1:
+                assert got == gb0
+
+
+def test_rescale_global_batch_for_mesh_reads_dp_axis():
+    """The mesh-aware wrapper reads the "data" axis width off the mesh
+    itself, so a 3D mesh's model/expert axes cannot skew the batch."""
+    _run("""
+    import jax
+    from repro.core import (MeshSpec, rescale_global_batch_for_mesh,
+                            survivor_mesh3d)
+
+    spec = MeshSpec(data=4, model=2, expert=1, legal_model=(1, 2))
+    m_a = survivor_mesh3d(jax.devices(), spec)            # (4, 2, 1)
+    spec_b = MeshSpec(data=2, model=2, expert=2, legal_model=(1, 2),
+                      num_experts=8)
+    m_b = survivor_mesh3d(jax.devices(), spec_b)          # (2, 2, 2)
+    # 8 devices either way; dp differs (4 vs 2): batch follows dp alone
+    assert rescale_global_batch_for_mesh(16, m_a, m_b) == 8
+    assert rescale_global_batch_for_mesh(8, m_b, m_a) == 16
+    # same dp, ep folded away: identity
+    spec_c = MeshSpec(data=2, model=2, expert=1, legal_model=(1, 2))
+    m_c = survivor_mesh3d(jax.devices()[:4], spec_c)      # (2, 2, 1)
+    assert rescale_global_batch_for_mesh(8, m_b, m_c) == 8
+    print("rescale_for_mesh OK")
+    """, devices=8)
