@@ -23,6 +23,10 @@ import time
 from typing import Dict, List
 
 OVERHEAD_BUDGET = 0.02      # instrumented-vs-bare train-step ceiling
+#: a paired median below this is not "free instrumentation", it is a
+#: broken measurement (the instrumented arm cannot beat bare by more
+#: than noise) — fail the bench rather than report a nonsense number
+OVERHEAD_FLOOR = -0.005
 
 
 def write_json(results: Dict[str, float],
@@ -92,11 +96,29 @@ def bench_train_overhead(steps: int = 40) -> Dict[str, float]:
         # skip the first few records: scheduler noise settles
         return statistics.median(r["seconds"] for r in hist[3:])
 
-    # interleave to keep thermal/load drift from biasing one arm
-    bare = [run(None) for _ in range(2)]
-    instr = [run(Observability()) for _ in range(2)]
-    bare_s, instr_s = min(bare), min(instr)
-    overhead = (instr_s - bare_s) / bare_s
+    # PAIRED, INTERLEAVED measurement: each trial runs both arms back to
+    # back (order alternating so neither arm systematically inherits a
+    # warmer cache / throttled clock), and the reported fraction is the
+    # median of the per-pair ratios.  Sequential min-of-arms measured the
+    # machine's drift, not the instrumentation — BENCH_obs.json once
+    # reported overhead_frac=-0.06, i.e. the instrumented run "won" by
+    # 6% because it ran later on a warmed-up machine.
+    pairs: List[float] = []
+    bares: List[float] = []
+    instrs: List[float] = []
+    for trial in range(5):
+        if trial % 2 == 0:
+            b = run(None)
+            i = run(Observability())
+        else:
+            i = run(Observability())
+            b = run(None)
+        bares.append(b)
+        instrs.append(i)
+        pairs.append((i - b) / b)
+    bare_s = statistics.median(bares)
+    instr_s = statistics.median(instrs)
+    overhead = statistics.median(pairs)
     return {"bare_step_us": bare_s * 1e6,
             "instrumented_step_us": instr_s * 1e6,
             "overhead_frac": overhead}
@@ -118,20 +140,28 @@ def main() -> List[str]:
 
     tr = bench_train_overhead()
     results.update(tr)
-    ok = tr["overhead_frac"] < OVERHEAD_BUDGET
+    ok = OVERHEAD_FLOOR <= tr["overhead_frac"] < OVERHEAD_BUDGET
     print(f"train step: bare={tr['bare_step_us']:.0f}us "
           f"instrumented={tr['instrumented_step_us']:.0f}us "
           f"-> overhead={tr['overhead_frac'] * 100:.2f}% "
-          f"(budget {OVERHEAD_BUDGET * 100:.0f}%: "
-          f"{'OK' if ok else 'EXCEEDED'})")
+          f"(valid range [{OVERHEAD_FLOOR * 100:.1f}%, "
+          f"{OVERHEAD_BUDGET * 100:.0f}%): "
+          f"{'OK' if ok else 'OUT OF RANGE'})")
     rows.append(f"obs_train_step_instrumented,{tr['instrumented_step_us']:.0f},"
                 f"overhead_frac={tr['overhead_frac']:.4f}")
     results["overhead_budget"] = OVERHEAD_BUDGET
+    results["overhead_floor"] = OVERHEAD_FLOOR
     results["within_budget"] = float(ok)
 
     path = write_json(results)
     print(f"(machine-readable results: {path})")
     if not ok:
+        if tr["overhead_frac"] < OVERHEAD_FLOOR:
+            raise RuntimeError(
+                f"instrumented train step measured "
+                f"{tr['overhead_frac'] * 100:.2f}% FASTER than bare — "
+                f"below the {OVERHEAD_FLOOR * 100:.1f}% noise floor, the "
+                "paired measurement itself is broken")
         raise RuntimeError(
             f"instrumented train step {tr['overhead_frac'] * 100:.2f}% over "
             f"bare exceeds the {OVERHEAD_BUDGET * 100:.0f}% telemetry "

@@ -17,7 +17,7 @@ def main() -> None:
     from benchmarks import (bench_chaos, bench_checkpoint, bench_elastic,
                             bench_heartbeat, bench_kernels, bench_obs,
                             bench_overhead_fwi, bench_sdc, bench_serve,
-                            bench_throughput)
+                            bench_telemetry, bench_throughput)
     suites = [
         ("overhead_fwi", "overhead_fwi (paper Fig.1-2, eq.2-3)",
          bench_overhead_fwi.main),
@@ -34,6 +34,8 @@ def main() -> None:
          bench_elastic.main),
         ("obs", "telemetry overhead (docs/observability.md)",
          bench_obs.main),
+        ("telemetry", "telemetry plane (docs/observability.md)",
+         bench_telemetry.main),
     ]
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=[s[0] for s in suites],
@@ -59,7 +61,8 @@ def main() -> None:
                          ("BENCH_SERVE_JSON", "BENCH_serve.json"),
                          ("BENCH_CHAOS_JSON", "BENCH_chaos.json"),
                          ("BENCH_ELASTIC_JSON", "BENCH_elastic.json"),
-                         ("BENCH_OBS_JSON", "BENCH_obs.json")):
+                         ("BENCH_OBS_JSON", "BENCH_obs.json"),
+                         ("BENCH_TELEMETRY_JSON", "BENCH_telemetry.json")):
         json_path = os.environ.get(env, default)
         if os.path.exists(json_path):  # written by the owning bench module
             print(f"(machine-readable results: {json_path})")

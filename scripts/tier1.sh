@@ -27,6 +27,9 @@ test -f tests/test_obs.py
 # and the elastic 3D mesh suite (tests/test_elastic_3d.py: grid/MoE
 # degradation/sim units + the (2,2,2) host-kill E2E, marked `slow`)
 test -f tests/test_elastic_3d.py
+# and the telemetry-plane suite (tests/test_telemetry.py: wire/merge/
+# detector/policy units + the straggle-then-kill E2Es, marked `slow`)
+test -f tests/test_telemetry.py
 ARGS=()
 for a in "$@"; do
   if [ "$a" = "--fast" ]; then

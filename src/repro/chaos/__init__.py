@@ -13,6 +13,7 @@ from repro.chaos.driver import (ServeScenarioDriver, TrainScenarioDriver,
                                 run_scenario_elastic)
 from repro.chaos.invariants import (InvariantResult, InvariantViolation,
                                     check_conservation,
+                                    check_detect_before_act,
                                     check_monotonic_drain,
                                     check_no_dead_growth,
                                     check_no_lost_steps,
@@ -27,7 +28,8 @@ __all__ = [
     "ChaosEvent", "ControlPlaneSim", "InvariantResult",
     "InvariantViolation", "KINDS", "Scenario", "ScenarioError",
     "ServeScenarioDriver", "SimReport", "TrainScenarioDriver",
-    "WINDOW_KINDS", "check_conservation", "check_monotonic_drain",
+    "WINDOW_KINDS", "check_conservation", "check_detect_before_act",
+    "check_monotonic_drain",
     "check_no_dead_growth", "check_no_lost_steps", "check_token_identical",
     "check_trajectory_match", "check_zero_drop", "pass_rate",
     "run_scenario_elastic", "summarize", "verify",

@@ -142,7 +142,7 @@ class TrainScenarioDriver:
                 for h in ev.args["hosts"]:
                     self._emitter(h)           # fail fast on bad ids
                 self._actions.append((int(ev.at), ev.eid, "kill",
-                                      self._make_kill(ev)))
+                                      self._make_kill(ev.args["hosts"])))
             elif ev.kind == "rejoin":
                 self._emitter(ev.args["host"])
                 self._actions.append((int(ev.at), ev.eid, "rejoin",
@@ -166,6 +166,17 @@ class TrainScenarioDriver:
                 extra = (ev.args["factor"] - 1.0) * step_seconds
                 for step in range(int(ev.at), int(ev.until)):
                     self.injector.schedule_straggle(step, extra)
+            elif ev.kind == "precursor_storm":
+                # symptom: the host straggles over [at, until) ...
+                self._emitter(ev.args["host"])
+                extra = (ev.args["factor"] - 1.0) * step_seconds
+                for step in range(int(ev.at), int(ev.until)):
+                    self.injector.schedule_straggle(step, extra)
+                # ... then the predicted failure lands AT the window end
+                if ev.args["kill"]:
+                    self._actions.append((
+                        int(ev.until), ev.eid, "kill",
+                        self._make_kill([ev.args["host"]])))
             else:
                 self.skipped.append(ev.kind)
 
@@ -178,9 +189,9 @@ class TrainScenarioDriver:
                     groups[0])
         return [h for g in groups if g is not keep for h in g]
 
-    def _make_kill(self, ev):
+    def _make_kill(self, hosts):
         def fire():
-            for h in ev.args["hosts"]:
+            for h in hosts:
                 self._emitter(h).pause()
             time.sleep(self.settle_seconds)
         return fire
@@ -258,14 +269,22 @@ class TrainScenarioDriver:
         (for ``invariants.check_no_dead_growth``)."""
         out: Dict[int, List[Tuple[float, float]]] = {}
         open_at: Dict[int, float] = {}
+        kills: List[Tuple[float, int]] = []    # (effective time, host)
         for ev in self.scenario.sorted_events():
             if ev.kind == "kill_hosts":
-                for h in ev.args["hosts"]:
-                    open_at[h] = ev.at
-            elif ev.kind == "rejoin":
-                h = ev.args["host"]
+                kills.extend((ev.at, h) for h in ev.args["hosts"])
+            elif ev.kind == "precursor_storm" and ev.args["kill"]:
+                kills.append((ev.until, ev.args["host"]))
+        rejoins = [(ev.at, ev.args["host"])
+                   for ev in self.scenario.point_events("rejoin")]
+        marks = ([(t, 0, h) for t, h in kills]
+                 + [(t, 1, h) for t, h in rejoins])
+        for t, action, h in sorted(marks):
+            if action == 0:
+                open_at[h] = t
+            else:
                 if h in open_at:
-                    out.setdefault(h, []).append((open_at.pop(h), ev.at))
+                    out.setdefault(h, []).append((open_at.pop(h), t))
         for h, t0 in open_at.items():
             out.setdefault(h, []).append((t0, float("inf")))
         return out
@@ -439,6 +458,17 @@ class ServeScenarioDriver:
                 for step in range(int(ev.at), int(ev.until)):
                     self.injector.schedule_latency_spike(
                         step, extra, replica_id=ev.args["host"])
+            elif ev.kind == "precursor_storm":
+                # symptom: latency spikes over the window; predicted
+                # failure: the replica kill lands at the window end —
+                # the pre-drain must beat it there
+                extra = (ev.args["factor"] - 1.0) * step_seconds
+                for step in range(int(ev.at), int(ev.until)):
+                    self.injector.schedule_latency_spike(
+                        step, extra, replica_id=ev.args["host"])
+                if ev.args["kill"]:
+                    self.injector.schedule_replica_kill(
+                        int(ev.until), ev.args["host"])
             elif ev.kind in ("partition", "traffic_spike"):
                 pass                       # fired/queried at step time
             else:

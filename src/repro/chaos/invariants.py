@@ -178,6 +178,67 @@ def check_conservation(samples: Sequence[Dict[str, int]]) -> InvariantResult:
 
 
 # ---------------------------------------------------------------------------
+# telemetry plane
+# ---------------------------------------------------------------------------
+
+#: proactive actions the telemetry plane takes on a precursor
+ACT_KINDS = (("checkpoint", "proactive"), ("serve", "replica_predrained"))
+
+
+def check_detect_before_act(events) -> InvariantResult:
+    """The telemetry plane's detect -> act ordering (docs/observability.md):
+
+    - at least one ``precursor/*`` event fired (the detectors saw the
+      staged symptom at all);
+    - every proactive ACT — a forced checkpoint (``checkpoint/proactive``)
+      or a serve pre-drain (``serve/replica_predrained``) — happens at or
+      after the first precursor (nothing acts on a prediction that does
+      not exist yet);
+    - every observed failure of a host a precursor named — a
+      ``heartbeat/failure`` for that host, or a ``serve/replica_failed``
+      whose ``hosts`` include it — happens after that host's first
+      precursor: the plane predicted the failures it claims to predict.
+
+    ``events`` is any ``Event`` sequence (bus ring, collector merge, or
+    ``load_jsonl``)."""
+    name = "detect-before-act"
+    evs = sorted(events, key=lambda e: (e.t_mono, e.seq))
+    first_any: Optional[float] = None
+    first_by_host: Dict[int, float] = {}
+    for e in evs:
+        if e.subsystem == "precursor":
+            if first_any is None:
+                first_any = e.t_mono
+            h = e.data.get("host")
+            if h is not None:
+                first_by_host.setdefault(int(h), e.t_mono)
+    if first_any is None:
+        return _bad(name, "no precursor/* event fired")
+    for e in evs:
+        if (e.subsystem, e.kind) in ACT_KINDS and e.t_mono < first_any:
+            return _bad(name,
+                        f"{e.subsystem}/{e.kind} at t={e.t_mono:.3f} "
+                        f"precedes the first precursor "
+                        f"(t={first_any:.3f})")
+    for e in evs:
+        hosts: List[int] = []
+        if (e.subsystem, e.kind) == ("heartbeat", "failure") and \
+                e.data.get("host") is not None:
+            hosts = [int(e.data["host"])]
+        elif (e.subsystem, e.kind) == ("serve", "replica_failed"):
+            hosts = [int(h) for h in e.data.get("hosts", ())]
+        for h in hosts:
+            if h in first_by_host and e.t_mono < first_by_host[h]:
+                return _bad(name,
+                            f"host {h} failed at t={e.t_mono:.3f} "
+                            f"before its first precursor "
+                            f"(t={first_by_host[h]:.3f})")
+    acts = sum(1 for e in evs if (e.subsystem, e.kind) in ACT_KINDS)
+    return _ok(name, f"{sum(1 for e in evs if e.subsystem == 'precursor')}"
+               f" precursors before {acts} proactive acts")
+
+
+# ---------------------------------------------------------------------------
 # suite helpers
 # ---------------------------------------------------------------------------
 

@@ -33,6 +33,10 @@ straggle        ``host`` runs ``factor``x slower over ``window``
 traffic_spike   arrival rate multiplied by ``mult`` over ``window``
 rejoin          a previously killed host comes back at ``at``
 preempt         the scheduler's termination warning (SIGUSR1) at ``at``
+precursor_storm ``host`` straggles at ``factor``x over ``window`` and
+                then (``kill=True``, the default) fail-stops AT the
+                window's end — the straggle-then-kill trace the
+                telemetry plane's detectors must catch in time
 ==============  =========================================================
 
 Drivers apply the kinds that exist on their plane and ignore the rest
@@ -48,11 +52,12 @@ import os
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 KINDS = ("kill_hosts", "partition", "sdc_storm", "straggle",
-         "traffic_spike", "rejoin", "preempt")
+         "traffic_spike", "rejoin", "preempt", "precursor_storm")
 CLOCKS = ("step", "time")
 
 #: kinds that occupy a ``[at, until)`` window rather than a point in time
-WINDOW_KINDS = ("partition", "sdc_storm", "straggle", "traffic_spike")
+WINDOW_KINDS = ("partition", "sdc_storm", "straggle", "traffic_spike",
+                "precursor_storm")
 
 
 class ScenarioError(ValueError):
@@ -201,6 +206,23 @@ class Scenario:
         return self._add("rejoin", _check_at("rejoin", at), None,
                          host=int(host))
 
+    def precursor_storm(self, host: int, factor: float,
+                        window: Sequence[float],
+                        kill: bool = True) -> "Scenario":
+        """``host`` degrades visibly — ``factor``x slower over
+        ``window`` — and then fail-stops at the window's END (unless
+        ``kill=False``: a near-miss that recovers).  The canonical
+        precursor trace for the telemetry plane (docs/observability.md):
+        the straggle is the symptom the drift detector must turn into a
+        ``precursor/*`` event early enough for a proactive checkpoint /
+        pre-drain to land before the kill."""
+        if float(factor) <= 1:
+            raise ScenarioError(f"precursor_storm: factor must be > 1, "
+                                f"got {factor!r}")
+        start, end = _check_window("precursor_storm", window)
+        return self._add("precursor_storm", start, end, host=int(host),
+                         factor=float(factor), kill=bool(kill))
+
     def preempt(self, at: float, sig: str = "SIGUSR1") -> "Scenario":
         """Deliver the scheduler's preemption warning signal at ``at``
         (training plane: latch -> final checkpoint -> clean exit)."""
@@ -215,23 +237,36 @@ class Scenario:
     def validate(self) -> "Scenario":
         """Whole-timeline checks (builders validate per-event args):
         every rejoin names a host killed strictly earlier; a host is not
-        killed twice without a rejoin in between.  Returns self."""
-        dead_since: Dict[int, float] = {}
+        killed twice without a rejoin in between.  Kill/rejoin actions
+        are ordered by their EFFECTIVE time — ``kill_hosts`` and
+        ``rejoin`` fire at ``at``, a killing ``precursor_storm`` at its
+        window's ``until`` — so a storm's deferred kill pairs correctly
+        with a later rejoin.  Returns self."""
+        actions: List[Tuple[float, int, str, int]] = []
         for ev in self.sorted_events():
             if ev.kind == "kill_hosts":
                 for h in ev.args["hosts"]:
-                    if h in dead_since:
-                        raise ScenarioError(
-                            f"host {h} killed at t={ev.at} but already "
-                            f"dead since t={dead_since[h]} (no rejoin in "
-                            "between)")
-                    dead_since[h] = ev.at
+                    actions.append((ev.at, ev.eid, "kill", h))
+            elif ev.kind == "precursor_storm" and ev.args["kill"]:
+                actions.append((ev.until, ev.eid, "kill",
+                                ev.args["host"]))
             elif ev.kind == "rejoin":
-                h = ev.args["host"]
+                actions.append((ev.at, ev.eid, "rejoin",
+                                ev.args["host"]))
+        dead_since: Dict[int, float] = {}
+        for t, _, action, h in sorted(actions):
+            if action == "kill":
+                if h in dead_since:
+                    raise ScenarioError(
+                        f"host {h} killed at t={t} but already dead "
+                        f"since t={dead_since[h]} (no rejoin in "
+                        "between)")
+                dead_since[h] = t
+            else:
                 if h not in dead_since:
                     raise ScenarioError(
-                        f"rejoin of host {h} at t={ev.at} but it was "
-                        "never killed before that")
+                        f"rejoin of host {h} at t={t} but it was never "
+                        "killed before that")
                 del dead_since[h]
         return self
 
@@ -311,6 +346,10 @@ class Scenario:
                     sc.rejoin(ev.pop("host"), at=ev.pop("at"))
                 elif kind == "preempt":
                     sc.preempt(ev.pop("at"), sig=ev.pop("sig", "SIGUSR1"))
+                elif kind == "precursor_storm":
+                    sc.precursor_storm(ev.pop("host"), ev.pop("factor"),
+                                       ev.pop("window"),
+                                       kill=ev.pop("kill", True))
             except KeyError as e:
                 raise ScenarioError(f"event {i} ({kind}): missing "
                                     f"required field {e}")

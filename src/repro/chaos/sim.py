@@ -233,6 +233,18 @@ class ControlPlaneSim:
                         f"kill_hosts targets host {h}; sim has "
                         f"{self.num_hosts}")
                 kills.setdefault(self._tick_of(ev.at, clock), []).append(h)
+        for ev in scenario.window_events("precursor_storm"):
+            # the straggle itself is invisible to the control plane (the
+            # host keeps beating); the deferred kill is not
+            if not ev.args["kill"]:
+                continue
+            h = ev.args["host"]
+            if not 0 <= h < self.num_hosts:
+                raise ScenarioError(
+                    f"precursor_storm targets host {h}; sim has "
+                    f"{self.num_hosts}")
+            kills.setdefault(self._tick_of(ev.until, clock),
+                             []).append(h)
         for ev in scenario.point_events("rejoin"):
             rejoins.setdefault(self._tick_of(ev.at, clock), []).append(
                 ev.args["host"])

@@ -35,6 +35,7 @@ def run_bsp(dep: Dependability, train_step: Callable, state, data,
             num_steps: int, *, fault_injector: Optional[FaultInjector] = None,
             on_metrics: Optional[Callable[[int, Dict], None]] = None,
             stop_check: Optional[Callable[[], Optional[str]]] = None,
+            proactive: Optional[Callable[[int], Optional[str]]] = None,
             final_save: bool = True) -> Tuple[Any, str, List[Dict]]:
     """Runs supersteps until ``num_steps`` or interruption.
 
@@ -43,6 +44,12 @@ def run_bsp(dep: Dependability, train_step: Callable, state, data,
     a non-None reason pauses the loop exactly like an interruption (final
     save + flush) but reports the reason — the elastic layer uses it to
     stop for non-failure events (e.g. a rejoining host growing the mesh).
+    ``proactive`` is the telemetry plane's precursor hook
+    (``repro.obs.anomaly.make_proactive_hook``): polled after each
+    superstep when the policy cadence does NOT already save; a non-None
+    reason forces a checkpoint now, ahead of the failure the precursors
+    predict (docs/observability.md).  Forced saves flow through
+    ``dep.save`` like any other, so they re-anchor the policy cadence.
     May raise SimulatedFailure (injected fail-stop) or CorruptionDetected
     (SDC tier tripped) — run_with_recovery handles both.
     """
@@ -91,6 +98,15 @@ def run_bsp(dep: Dependability, train_step: Callable, state, data,
 
         if dep.should_checkpoint(step):
             dep.save(step, state)
+        elif proactive is not None:
+            why = proactive(step)
+            if why is not None:
+                dep.save(step, state)
+                if dep.obs is not None:
+                    dep.obs.emit("checkpoint", "proactive", step=step,
+                                 reason=why)
+                    dep.obs.registry.counter(
+                        "checkpoint.proactive").inc()
     dep.manager.wait()
     return state, "done", history
 
@@ -100,7 +116,9 @@ def run_with_recovery(dep: Dependability, train_step: Callable, state, data,
                       fault_injector: Optional[FaultInjector] = None,
                       max_restarts: int = 3,
                       like=None, shardings=None,
-                      on_metrics=None) -> Tuple[Any, Dict]:
+                      on_metrics=None,
+                      proactive: Optional[Callable[[int], Optional[str]]]
+                      = None) -> Tuple[Any, Dict]:
     """Failure recovery loop: restore-from-checkpoint on fail-stop OR
     detected corruption.
 
@@ -120,7 +138,8 @@ def run_with_recovery(dep: Dependability, train_step: Callable, state, data,
         try:
             state, status, hist = run_bsp(
                 dep, train_step, state, data, num_steps,
-                fault_injector=fault_injector, on_metrics=on_metrics)
+                fault_injector=fault_injector, on_metrics=on_metrics,
+                proactive=proactive)
             all_history.extend(hist)
             return state, {"status": status, "restarts": restarts,
                            "history": all_history}

@@ -116,7 +116,8 @@ def run_elastic(dep: Dependability, make_step: Callable, state, data,
                 max_events: int = 8,
                 fault_injector=None,
                 on_metrics=None,
-                on_event: Optional[Callable[[MeshEvent], None]] = None
+                on_event: Optional[Callable[[MeshEvent], None]] = None,
+                proactive: Optional[Callable[[int], Optional[str]]] = None
                 ) -> Tuple[Any, Dict]:
     """Train to ``num_steps`` surviving host failures and rejoins.
 
@@ -151,6 +152,11 @@ def run_elastic(dep: Dependability, make_step: Callable, state, data,
       the survivor set so the first mesh excludes already-dead hosts;
       those hosts can still rejoin later — membership in ``host_devices``
       is what makes a host eligible for grow events.
+    - ``proactive``: the telemetry plane's precursor hook (see
+      ``run_bsp``): polled each superstep; a non-None reason forces a
+      checkpoint ahead of a predicted failure, so the shrink that
+      follows a precursor-flagged host's death walks back (near) zero
+      steps.
 
     Returns ``(state, info)`` with ``info["events"]`` the MeshEvent list
     and ``info["history"]`` the merged superstep history.  Raises
@@ -189,7 +195,7 @@ def run_elastic(dep: Dependability, make_step: Callable, state, data,
                       like=like, shardings_fn=shardings_fn,
                       allow_grow=allow_grow, max_events=max_events,
                       fault_injector=fault_injector, on_metrics=on_metrics,
-                      on_event=on_event)
+                      on_event=on_event, proactive=proactive)
     finally:
         # the latches are only meaningful inside this run: restore the
         # user's callbacks so a later run (or user assignment) does not
@@ -230,7 +236,7 @@ def _drive(dep, make_step, state, data, num_steps, monitor, fail_latch,
            rejoin_latch, stop_for_grow, *, host_devices, initial_hosts,
            model_axis, mesh_spec, degrade_experts, like, shardings_fn,
            allow_grow, max_events, fault_injector, on_metrics,
-           on_event) -> Tuple[Any, Dict]:
+           on_event, proactive=None) -> Tuple[Any, Dict]:
     events: List[MeshEvent] = []
     all_history: List[Dict] = []
     active = sorted(host_devices if initial_hosts is None else initial_hosts)
@@ -295,7 +301,8 @@ def _drive(dep, make_step, state, data, num_steps, monitor, fail_latch,
             state, status, hist = run_bsp(
                 dep, train_step, state, data, num_steps,
                 fault_injector=fault_injector, on_metrics=on_metrics,
-                stop_check=stop_for_grow if allow_grow else None)
+                stop_check=stop_for_grow if allow_grow else None,
+                proactive=proactive)
         all_history.extend(hist)
         if status == "done":
             return state, {"status": "done", "events": events,

@@ -64,18 +64,27 @@ class CheckpointPolicy:
     mode="every_n": fixed interval (paper's FWI setting used n=1).
     mode="young_daly": adaptive interval from eq. (1) with online C/step-time
     estimates.
+    mode="risk_adjusted": young_daly, but the telemetry plane's per-host
+    risk score (``observe_risk``, fed by the anomaly detectors —
+    docs/observability.md "Telemetry plane") deflates the effective MTBF
+    by ``(1 + risk_gain * risk)``: eq. (1) with the *conditional* failure
+    rate given the precursors we are currently seeing, so the interval
+    contracts ahead of a predicted failure and relaxes back as risk
+    decays.  With risk 0 it is exactly young_daly.
     """
 
     def __init__(self, mode: str = "young_daly", every_n: int = 1,
                  system: Optional[SystemModel] = None, ema: float = 0.7,
                  min_interval: int = 1, max_interval: int = 100_000,
-                 formula: str = "paper"):
-        assert mode in ("every_n", "young_daly"), mode
+                 formula: str = "paper", risk_gain: float = 8.0):
+        assert mode in ("every_n", "young_daly", "risk_adjusted"), mode
         assert formula in FORMULAS, formula
         self.mode = mode
         self.formula = formula
         self.every_n = max(int(every_n), 1)
         self.system = system or SystemModel()
+        self.risk_gain = float(risk_gain)
+        self.risk = 0.0                  # latest telemetry risk in [0, 1]
         self._ema = ema
         self.step_time_s: Optional[float] = None
         self.ckpt_cost_s: Optional[float] = None
@@ -131,13 +140,23 @@ class CheckpointPolicy:
                 self._ema * self.system.downtime_seconds
                 + (1 - self._ema) * float(downtime_s))
 
+    def observe_risk(self, risk: float) -> None:
+        """Feed the telemetry plane's current max per-host risk score
+        (clamped to [0, 1]).  Only mode="risk_adjusted" consumes it."""
+        self.risk = min(max(float(risk), 0.0), 1.0)
+
     # ---- decisions ----
     def interval_steps(self) -> int:
         if self.mode == "every_n":
             return self.every_n
         if not self.step_time_s or self.ckpt_cost_s is None:
             return self.min_interval  # bootstrap: measure C asap
-        t_opt = young_daly_period(self.system.system_mtbf, self.ckpt_cost_s,
+        mtbf = self.system.system_mtbf
+        if self.mode == "risk_adjusted" and self.risk > 0.0:
+            # precursors say failures are (1 + gain*risk)x more likely
+            # right now -> eq. (1) on the conditional MTBF
+            mtbf /= (1.0 + self.risk_gain * self.risk)
+        t_opt = young_daly_period(mtbf, self.ckpt_cost_s,
                                   self.system.restart_seconds,
                                   self.system.downtime_seconds,
                                   formula=self.formula)

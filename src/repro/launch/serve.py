@@ -53,6 +53,12 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics-snapshot", default="",
                     help="write a JSON metrics snapshot to this path at "
                          "the end of the run")
+    ap.add_argument("--pre-drain", action="store_true",
+                    help="telemetry plane: run the anomaly detectors over "
+                         "the engine's event stream and pre-drain a "
+                         "replica whose host risk crosses "
+                         "--risk-threshold (docs/observability.md)")
+    ap.add_argument("--risk-threshold", type=float, default=0.8)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -73,18 +79,28 @@ def main(argv=None) -> int:
     fault_tolerant = args.fault_tolerant or args.standbys > 0
 
     obs = None
-    if args.telemetry_dir or args.metrics_snapshot:
+    if args.telemetry_dir or args.metrics_snapshot or args.pre_drain:
         import os as _os
         from repro.obs import Observability
         obs = Observability(
             jsonl_path=(_os.path.join(args.telemetry_dir, "events.jsonl")
                         if args.telemetry_dir else None))
 
+    anomaly = None
+    risk_source = None
+    if args.pre_drain:
+        from repro.obs import AnomalyEngine
+        anomaly = AnomalyEngine()
+        anomaly.attach(obs.bus)
+        risk_source = anomaly.risk_scores
+
     engine = ServeEngine(cfg, params, num_replicas=args.replicas,
                          slots_per_replica=args.slots,
                          max_len=args.prompt_len + args.gen,
                          fault_tolerant=fault_tolerant,
-                         fault_injector=injector, obs=obs)
+                         fault_injector=injector, obs=obs,
+                         risk_source=risk_source,
+                         pre_drain_threshold=args.risk_threshold)
     ckpt_dir = None
     if args.standbys > 0:
         # warm-standby params come back through restore_latest — the same

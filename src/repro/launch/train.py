@@ -65,7 +65,7 @@ def main(argv=None) -> int:
     ap.add_argument("--model-par", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--policy", default="young_daly",
-                    choices=["young_daly", "every_n"])
+                    choices=["young_daly", "every_n", "risk_adjusted"])
     ap.add_argument("--every-n", type=int, default=10)
     ap.add_argument("--node-mtbf-hours", type=float, default=24 * 365)
     ap.add_argument("--num-nodes", type=int, default=1)
@@ -99,6 +99,15 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics-snapshot", default="",
                     help="write a JSON metrics snapshot to this path at "
                          "the end of the run")
+    ap.add_argument("--telemetry-plane", action="store_true",
+                    help="run the in-process telemetry plane: anomaly "
+                         "detectors over the event stream, per-host risk "
+                         "scores (docs/observability.md)")
+    ap.add_argument("--proactive-checkpoint", action="store_true",
+                    help="force a checkpoint when a precursor pushes any "
+                         "host's risk past --risk-threshold (implies "
+                         "--telemetry-plane)")
+    ap.add_argument("--risk-threshold", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -132,13 +141,32 @@ def main(argv=None) -> int:
     dep.register_local_state(data)
 
     obs = None
-    if args.telemetry_dir or args.metrics_snapshot:
+    want_plane = args.telemetry_plane or args.proactive_checkpoint
+    if args.telemetry_dir or args.metrics_snapshot or want_plane:
         from repro.obs import Observability
         import os as _os
         obs = Observability(
             jsonl_path=(_os.path.join(args.telemetry_dir, "events.jsonl")
                         if args.telemetry_dir else None))
         dep.attach_obs(obs)
+
+    proactive = None
+    if want_plane:
+        from repro.obs import AnomalyEngine, make_proactive_hook
+        anomaly = AnomalyEngine()
+        anomaly.attach(obs.bus)
+        if args.proactive_checkpoint:
+            proactive = make_proactive_hook(
+                anomaly.risk_scores, threshold=args.risk_threshold,
+                policy=(dep.policy if args.policy == "risk_adjusted"
+                        else None))
+        elif args.policy == "risk_adjusted":
+            # no forced saves — risk still tightens the Young/Daly
+            # interval through the policy
+            def proactive(step, _a=anomaly, _p=dep.policy):
+                _p.observe_risk(
+                    max(_a.risk_scores().values(), default=0.0))
+                return None
 
     with mesh_context(mesh):
         step_fn = jax.jit(
@@ -181,7 +209,7 @@ def main(argv=None) -> int:
         state, info = run_with_recovery(
             dep, step_fn, state, data, args.steps,
             fault_injector=injector, like=template, shardings=shardings,
-            on_metrics=on_metrics)
+            on_metrics=on_metrics, proactive=proactive)
         wall = time.perf_counter() - t0
 
     n_saves = len(dep.save_history)

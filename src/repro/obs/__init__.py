@@ -27,12 +27,19 @@ from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
 from repro.obs.timeline import Incident, Timeline
 from repro.obs.export import (to_chrome_trace, to_scenario,
                               write_chrome_trace)
+from repro.obs.anomaly import (AnomalyEngine, BeatJitterDetector,
+                               ScrubRateDetector, StepTimeDriftDetector,
+                               make_proactive_hook)
+from repro.obs.agent import TelemetryAgent
+from repro.obs.collector import Collector
 
 __all__ = [
     "Observability", "EventBus", "Event", "DEFAULT_CAPACITY",
     "load_jsonl", "MetricsRegistry", "Counter", "Gauge", "Histogram",
     "Span", "Timeline", "Incident", "to_chrome_trace",
-    "write_chrome_trace", "to_scenario",
+    "write_chrome_trace", "to_scenario", "AnomalyEngine",
+    "BeatJitterDetector", "ScrubRateDetector", "StepTimeDriftDetector",
+    "make_proactive_hook", "TelemetryAgent", "Collector",
 ]
 
 

@@ -20,7 +20,13 @@ to request records.
 
 A JSONL sink (``attach_jsonl``) persists every event as one JSON line at
 emit time — the durable record ``repro.obs.export.to_scenario`` converts
-back into a replayable chaos ``Scenario`` (record-and-replay).
+back into a replayable chaos ``Scenario`` (record-and-replay).  The sink
+is size-bounded the same way the ring is count-bounded: past
+``max_bytes`` the live file rotates to ``<path>.1..N`` (ascending =
+chronological) and at most ``max_segments`` rotated segments are kept —
+under sustained traffic the on-disk log can no longer grow without
+limit.  ``load_jsonl`` reads the rotated segments in order, then the
+live file, so replay sees one continuous stream.
 """
 from __future__ import annotations
 
@@ -84,6 +90,10 @@ class EventBus:
         self._subscribers: List[Callable[[Event], None]] = []
         self._jsonl: Optional[io.TextIOBase] = None
         self._jsonl_path: Optional[str] = None
+        self._jsonl_max_bytes: Optional[int] = None
+        self._jsonl_max_segments = 8
+        self._jsonl_bytes = 0
+        self._jsonl_indices: List[int] = []   # live rotated-segment indices
 
     # ------------------------------------------------------------------
     # producing
@@ -103,12 +113,13 @@ class EventBus:
                 self.dropped += 1
             self._ring.append(ev)
             subscribers = list(self._subscribers)
-            sink = self._jsonl
-        if sink is not None:
-            try:
-                sink.write(json.dumps(ev.to_dict()) + "\n")
-            except ValueError:
-                pass                       # sink closed under the emitter
+            # sink write INSIDE the lock: rotation (close + rename + reopen)
+            # must be atomic against concurrent emitters
+            if self._jsonl is not None:
+                try:
+                    self._sink_write(json.dumps(ev.to_dict()) + "\n")
+                except ValueError:
+                    pass                   # sink closed under the emitter
         # callbacks OUTSIDE the lock: a subscriber may emit (re-entrancy)
         # or inspect the bus without deadlocking
         for fn in subscribers:
@@ -156,16 +167,54 @@ class EventBus:
     # ------------------------------------------------------------------
     # JSONL sink (record side of record-and-replay)
     # ------------------------------------------------------------------
-    def attach_jsonl(self, path: str) -> str:
+    def attach_jsonl(self, path: str, max_bytes: Optional[int] = None,
+                     max_segments: int = 8) -> str:
         """Persist every subsequent event as one JSON line at ``path``
-        (append mode: re-attaching resumes the log)."""
+        (append mode: re-attaching resumes the log).
+
+        ``max_bytes`` bounds the LIVE file: a write that would push it
+        past the cap first rotates it to ``<path>.<i>`` (``i`` ascending,
+        so ``.1`` is the oldest segment) and keeps at most
+        ``max_segments`` rotated segments, deleting older ones — total
+        disk is bounded by ~``(max_segments + 1) * max_bytes``.
+        ``max_bytes=None`` (default) keeps the unbounded legacy
+        behaviour."""
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         with self._lock:
             if self._jsonl is not None:
                 self._jsonl.close()
             self._jsonl = open(path, "a")
             self._jsonl_path = path
+            self._jsonl_max_bytes = max_bytes
+            self._jsonl_max_segments = max(int(max_segments), 1)
+            self._jsonl_bytes = self._jsonl.tell()
+            self._jsonl_indices = _segment_indices(path)
         return path
+
+    def _sink_write(self, line: str) -> None:
+        """Write one line to the sink, rotating first if it would push
+        the live file past ``max_bytes``.  Caller holds the lock."""
+        if (self._jsonl_max_bytes is not None and self._jsonl_bytes > 0
+                and self._jsonl_bytes + len(line) > self._jsonl_max_bytes):
+            self._rotate_locked()
+        self._jsonl.write(line)
+        self._jsonl_bytes += len(line)
+
+    def _rotate_locked(self) -> None:
+        self._jsonl.close()
+        idx = (self._jsonl_indices[-1] + 1) if self._jsonl_indices else 1
+        os.replace(self._jsonl_path, f"{self._jsonl_path}.{idx}")
+        self._jsonl_indices.append(idx)
+        while len(self._jsonl_indices) > self._jsonl_max_segments:
+            doomed = self._jsonl_indices.pop(0)
+            try:
+                os.remove(f"{self._jsonl_path}.{doomed}")
+            except FileNotFoundError:
+                pass
+        self._jsonl = open(self._jsonl_path, "a")
+        self._jsonl_bytes = 0
 
     def flush(self) -> None:
         with self._lock:
@@ -179,12 +228,35 @@ class EventBus:
                 self._jsonl = None
 
 
+def _segment_indices(path: str) -> List[int]:
+    """Indices of existing rotated segments ``<path>.<i>``, ascending."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    base = os.path.basename(path) + "."
+    idxs = []
+    try:
+        names = os.listdir(d)
+    except FileNotFoundError:
+        return []
+    for name in names:
+        if name.startswith(base) and name[len(base):].isdigit():
+            idxs.append(int(name[len(base):]))
+    return sorted(idxs)
+
+
 def load_jsonl(path: str) -> List[Event]:
-    """Read a recorded event log back (replay side); skips blank lines."""
+    """Read a recorded event log back (replay side); skips blank lines.
+
+    Rotated segments (``<path>.1..N``, oldest = lowest index) are read
+    first, then the live file, so a rotated log replays as one
+    continuous stream."""
     out = []
-    with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if line:
-                out.append(Event.from_dict(json.loads(line)))
+    paths = [f"{path}.{i}" for i in _segment_indices(path)]
+    if os.path.exists(path) or not paths:
+        paths.append(path)        # missing live file still raises below
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    out.append(Event.from_dict(json.loads(line)))
     return out

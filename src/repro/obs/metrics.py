@@ -28,10 +28,17 @@ def _label_key(name: str, labels: Dict[str, Any]) -> Tuple:
     return (name,) + tuple(sorted((k, str(v)) for k, v in labels.items()))
 
 
+def _escape_label(v: Any) -> str:
+    """Prometheus label-value escaping: backslash, newline, quote."""
+    return (str(v).replace("\\", "\\\\").replace("\n", "\\n")
+            .replace('"', '\\"'))
+
+
 def _label_str(labels: Dict[str, Any]) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    inner = ",".join(f'{k}="{_escape_label(v)}"'
+                     for k, v in sorted(labels.items()))
     return "{" + inner + "}"
 
 
@@ -242,10 +249,16 @@ class MetricsRegistry:
                 f.write(text + "\n")
         return text
 
-    def to_prometheus(self) -> str:
+    def to_prometheus(self, quantiles: Tuple[float, ...] = (0.5, 0.99)
+                      ) -> str:
         """Prometheus text exposition (untyped beyond counter/gauge;
-        histograms export _count/_sum plus p50/p99 quantile gauges —
-        precomputed client-side quantiles, the summary-metric idiom)."""
+        histograms export _count/_sum plus quantile gauges — precomputed
+        client-side quantiles, the summary-metric idiom).  ``quantiles``
+        are fractions in [0, 1]; the default (0.5, 0.99) keeps the
+        long-standing p50/p99 output byte-identical."""
+        for q in quantiles:
+            if not 0.0 <= q <= 1.0:
+                raise ValueError(f"quantile must be in [0, 1], got {q}")
         lines: List[str] = []
         seen_types: Dict[str, str] = {}
         for inst in sorted(self.instruments(), key=lambda i: i.name):
@@ -264,10 +277,11 @@ class MetricsRegistry:
                 snap = inst.snapshot()
                 if f"# TYPE {base} summary" not in lines:
                     lines.append(f"# TYPE {base} summary")
-                for q in ("p50", "p99"):
-                    qls = dict(inst.labels,
-                               quantile=("0.5" if q == "p50" else "0.99"))
-                    lines.append(f"{base}{_label_str(qls)} {snap[q]:g}")
+                for q in quantiles:
+                    qls = dict(inst.labels, quantile=f"{q:g}")
+                    lines.append(
+                        f"{base}{_label_str(qls)} "
+                        f"{inst.percentile(q * 100.0):g}")
                 lines.append(f"{base}_count{ls} {snap['count']:g}")
                 lines.append(f"{base}_sum{ls} {snap['sum']:g}")
         return "\n".join(lines) + ("\n" if lines else "")

@@ -1,0 +1,963 @@
+"""Cross-host telemetry plane (docs/observability.md, "Telemetry plane").
+
+Layers under test, bottom up:
+
+- the bounded JSONL sink (rotation + ``load_jsonl`` segment ordering)
+  and the Prometheus exposition extensions (label escaping, configurable
+  quantiles);
+- the wire: ``TelemetryAgent`` datagram formation and the ``Collector``
+  merge protocol — (inc, seq) acceptance, per-host gap accounting,
+  skew-tolerant ordering.  The acceptance case: two agents with opposite
+  clock skews plus a dropped-datagram window still merge into one
+  gap-annotated global Timeline whose MTTR matches the single-host
+  oracle exactly;
+- the detectors (``StepTimeDriftDetector`` / ``BeatJitterDetector`` /
+  ``ScrubRateDetector``) and the ``AnomalyEngine`` risk fold;
+- the proactive consumers: risk-adjusted Young/Daly, ``run_bsp``'s
+  forced-checkpoint hook, the serve engine's replica pre-drain;
+- the ``check_detect_before_act`` invariant and the straggle-then-kill
+  E2Es (train via ``run_scenario_elastic`` + ``precursor_storm``, serve
+  via injected latency spikes), both marked ``slow``.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import pytest
+
+from repro.obs import (AnomalyEngine, BeatJitterDetector, Collector, Event,
+                       EventBus, MetricsRegistry, ScrubRateDetector,
+                       StepTimeDriftDetector, TelemetryAgent, Timeline,
+                       load_jsonl, make_proactive_hook)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCENARIOS = os.path.join(ROOT, "scenarios")
+
+
+# ---------------------------------------------------------------------------
+# JSONL sink rotation
+# ---------------------------------------------------------------------------
+
+def test_jsonl_rotation_keeps_stream_readable_in_order(tmp_path):
+    """Rotation must be invisible to the reader: emit past the byte cap,
+    then load_jsonl stitches segments + live file back into the exact
+    emit order."""
+    path = str(tmp_path / "t.jsonl")
+    bus = EventBus()
+    bus.attach_jsonl(path, max_bytes=600, max_segments=50)
+    n = 40
+    for i in range(n):
+        bus.emit("bench", "tick", step=i)
+    bus.close()
+    segs = sorted(p for p in os.listdir(tmp_path)
+                  if p.startswith("t.jsonl."))
+    assert segs, "the byte cap must have forced at least one rotation"
+    # every segment stays under the cap (a record written just before
+    # rotating may leave the file near but never over cap + one line)
+    for p in segs:
+        assert os.path.getsize(tmp_path / p) <= 600
+    back = load_jsonl(path)
+    assert [e.data["step"] for e in back] == list(range(n))
+    assert [e.seq for e in back] == sorted(e.seq for e in back)
+
+
+def test_jsonl_rotation_prunes_oldest_segments(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    bus = EventBus()
+    bus.attach_jsonl(path, max_bytes=300, max_segments=2)
+    for i in range(60):
+        bus.emit("bench", "tick", step=i)
+    bus.close()
+    segs = sorted(int(p.rsplit(".", 1)[1]) for p in os.listdir(tmp_path)
+                  if p.startswith("t.jsonl."))
+    assert len(segs) == 2
+    # pruning removes the OLDEST: surviving indices are the two highest
+    back = load_jsonl(path)
+    steps = [e.data["step"] for e in back]
+    assert steps == sorted(steps), "pruned stream must stay chronological"
+    assert steps[-1] == 59, "the newest records live in the live file"
+    assert steps[0] > 0, "the oldest records must have been pruned"
+
+
+def test_jsonl_reattach_resumes_segment_numbering(tmp_path):
+    """A restarted process re-attaching the same path must not clobber
+    existing rotated segments — numbering continues past them."""
+    path = str(tmp_path / "t.jsonl")
+    bus = EventBus()
+    bus.attach_jsonl(path, max_bytes=200, max_segments=50)
+    for i in range(20):
+        bus.emit("a", "x", step=i)
+    bus.close()
+    first = {p for p in os.listdir(tmp_path) if p.startswith("t.jsonl.")}
+    assert first
+    bus2 = EventBus()
+    bus2.attach_jsonl(path, max_bytes=200, max_segments=50)
+    for i in range(20, 40):
+        bus2.emit("a", "x", step=i)
+    bus2.close()
+    second = {p for p in os.listdir(tmp_path) if p.startswith("t.jsonl.")}
+    assert first < second, "pre-existing segments survived the re-attach"
+    assert [e.data["step"] for e in load_jsonl(path)] == list(range(40))
+
+
+def test_jsonl_unbounded_legacy_and_validation(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    bus = EventBus()
+    bus.attach_jsonl(path)                   # no cap: legacy behaviour
+    for i in range(200):
+        bus.emit("a", "x", step=i)
+    bus.close()
+    assert not [p for p in os.listdir(tmp_path)
+                if p.startswith("t.jsonl.")]
+    assert len(load_jsonl(path)) == 200
+    with pytest.raises(ValueError):
+        EventBus().attach_jsonl(str(tmp_path / "u.jsonl"), max_bytes=0)
+
+
+def test_load_jsonl_missing_file_still_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_jsonl(str(tmp_path / "never_written.jsonl"))
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition: quantiles + label escaping
+# ---------------------------------------------------------------------------
+
+def test_prometheus_custom_quantiles_and_default_identity():
+    reg = MetricsRegistry()
+    h = reg.histogram("serve.latency_ms")
+    for v in range(1, 101):
+        h.observe(float(v))
+    default = reg.to_prometheus()
+    assert default == reg.to_prometheus(quantiles=(0.5, 0.99)), \
+        "explicit default quantiles must be byte-identical"
+    assert 'quantile="0.5"' in default and 'quantile="0.99"' in default
+    custom = reg.to_prometheus(quantiles=(0.25, 0.9))
+    assert 'quantile="0.25"' in custom and 'quantile="0.9"' in custom
+    assert 'quantile="0.99"' not in custom
+    line = next(l for l in custom.splitlines() if 'quantile="0.25"' in l)
+    assert float(line.rsplit(" ", 1)[1]) == h.percentile(25.0)
+    with pytest.raises(ValueError):
+        reg.to_prometheus(quantiles=(1.5,))
+
+
+def test_prometheus_escapes_label_values():
+    reg = MetricsRegistry()
+    reg.counter("req.total", path='a"b\\c\nnext').inc(3)
+    text = reg.to_prometheus()
+    assert r'path="a\"b\\c\nnext"' in text
+    assert "\nnext" not in text.split("path=")[1].split("}")[0], \
+        "a raw newline inside a label value corrupts the exposition"
+
+
+# ---------------------------------------------------------------------------
+# wire: ingest protocol
+# ---------------------------------------------------------------------------
+
+def _dgram(host, seq, t_send, events=(), inc=1.0, **extra):
+    return {"host": host, "inc": inc, "seq": seq, "t_send": t_send,
+            "events": list(events), **extra}
+
+
+def _wire_event(t_mono, subsystem="train", kind="step", **data):
+    return {"seq": 0, "t_mono": t_mono, "t_wall": 0.0,
+            "subsystem": subsystem, "kind": kind, **data}
+
+
+def test_ingest_inc_seq_acceptance_and_gap_accounting():
+    col = Collector()
+    try:
+        assert col.ingest(_dgram(1, 0, 10.0), t_recv=10.1)
+        assert not col.ingest(_dgram(1, 0, 10.0), t_recv=10.2), \
+            "duplicate seq must be rejected as stale"
+        assert col.ingest(_dgram(1, 1, 10.5), t_recv=10.6)
+        # seq jumps 1 -> 4: two datagrams lost, one gap event synthesized
+        assert col.ingest(_dgram(1, 4, 11.0), t_recv=11.1)
+        gaps = col.events("telemetry", "gap")
+        assert len(gaps) == 1
+        assert gaps[0].data["missed_datagrams"] == 2
+        assert gaps[0].data["after_seq"] == 1
+        assert gaps[0].data["origin"] == 1
+        # an older incarnation is stale wholesale; a newer one supersedes
+        assert not col.ingest(_dgram(1, 9, 12.0, inc=0.5), t_recv=12.1)
+        assert col.ingest(_dgram(1, 0, 12.5, inc=2.0), t_recv=12.6)
+        rep = col.gap_report()[1]
+        assert rep == {"datagrams": 4, "missed": 2, "stale": 2}
+    finally:
+        col.stop()
+
+
+def test_ingest_accumulates_counter_deltas_and_gauge_last_values():
+    col = Collector()
+    try:
+        col.ingest(_dgram(3, 0, 1.0, counters={"tok": 5.0},
+                          gauges={"queue": 2.0}), t_recv=1.1)
+        col.ingest(_dgram(3, 1, 2.0, counters={"tok": 2.5},
+                          gauges={"queue": 7.0}), t_recv=2.1)
+        m = col.host_metrics()[3]
+        assert m["counters"] == {"tok": 7.5}
+        assert m["gauges"] == {"queue": 7.0}
+    finally:
+        col.stop()
+
+
+# ---------------------------------------------------------------------------
+# wire: skew + loss merge correctness (the acceptance case)
+# ---------------------------------------------------------------------------
+
+def test_merged_timeline_under_skew_and_loss_matches_oracle():
+    """Two agents whose monotonic clocks disagree with the collector's
+    (+40s and -25s), with a dropped-datagram window on one of them: the
+    merged stream must be gap-annotated, per-host emit-ordered, and its
+    incident MTTR must match the single-host oracle computed from the
+    host's own (unshipped, unskewed) bus."""
+    col = Collector()
+    shipped = {1: [], 2: []}
+
+    def capture(host):
+        def flt(h, payload):
+            shipped[host].append(payload)
+            return False                 # never hits the real socket
+        return flt
+
+    buses = {1: EventBus(), 2: EventBus()}
+    agents = {
+        1: TelemetryAgent(1, col.addr, buses[1], skew_seconds=40.0,
+                          chunk=1, send_filter=capture(1)),
+        2: TelemetryAgent(2, col.addr, buses[2], skew_seconds=-25.0,
+                          chunk=1, send_filter=capture(2)),
+    }
+    for host, ag in agents.items():
+        buses[host].subscribe(ag._on_event)
+
+    # host 1 lives through an incident with a known repair duration
+    buses[1].emit("heartbeat", "failure", host=1)
+    time.sleep(0.12)
+    buses[1].emit("train", "resume", step=7)
+    # host 2 emits ordered filler spanning the same wall-clock span
+    for i in range(6):
+        buses[2].emit("train", "step", step=i)
+        time.sleep(0.01)
+    for ag in agents.values():
+        ag.flush()                       # chunk=1: one datagram per event
+
+    oracle = Timeline.from_events(buses[1].events()).mttr()
+    assert oracle is not None and oracle > 0.1
+
+    # deliver host 1 intact; drop a mid-stream window of host 2 datagrams
+    for p in shipped[1]:
+        col.ingest(p)
+    dropped = 0
+    for p in shipped[2]:
+        if 2 <= p["seq"] <= 3:
+            dropped += 1
+            continue
+        col.ingest(p)
+    assert dropped == 2
+
+    try:
+        merged = col.events()
+        # (inc, seq) consistency: each host's events keep emit order in
+        # the global merge
+        for host in (1, 2):
+            steps = [e.data["step"] for e in merged
+                     if e.data.get("origin") == host and "step" in e.data]
+            assert steps == sorted(steps), (host, steps)
+        # the loss window is VISIBLE: gap accounting + a merged gap event
+        gaps = [e for e in merged
+                if (e.subsystem, e.kind) == ("telemetry", "gap")]
+        assert len(gaps) == 1 and gaps[0].data["origin"] == 2
+        assert gaps[0].data["missed_datagrams"] == 2
+        assert col.gap_report()[2]["missed"] == 2
+        assert col.gap_report()[1]["missed"] == 0
+        # same-host time differences survive skew + offset mapping
+        # exactly: merged MTTR == the single-host oracle
+        merged_mttr = Timeline.from_events(merged).mttr()
+        assert merged_mttr is not None
+        assert abs(merged_mttr - oracle) < 1e-9, (merged_mttr, oracle)
+        # and the merged timestamps live in the COLLECTOR's clock domain,
+        # not the skewed agents' (offset cancels the +/-40s skews)
+        span = max(e.t_mono for e in merged) - min(e.t_mono
+                                                   for e in merged)
+        assert span < 10.0, f"skew leaked into the merged clock: {span}"
+    finally:
+        col.stop()
+        for ag in agents.values():
+            ag._sock.close()
+
+
+def test_agent_collector_over_real_udp():
+    """The socket path end to end: background agent thread ships a live
+    bus to a listening collector."""
+    col = Collector().start()
+    bus = EventBus()
+    reg = MetricsRegistry()
+    reg.counter("tokens").inc(9)
+    ag = TelemetryAgent(0, col.addr, bus, registry=reg,
+                        period=0.02).start()
+    try:
+        for i in range(5):
+            bus.emit("train", "step", step=i, seconds=0.01)
+        deadline = time.time() + 5.0
+        while time.time() < deadline:
+            if len(col.events("train", "step")) == 5:
+                break
+            time.sleep(0.02)
+        got = col.events("train", "step")
+        assert [e.data["step"] for e in got] == [0, 1, 2, 3, 4]
+        assert all(e.data["origin"] == 0 for e in got)
+        deadline = time.time() + 5.0
+        while time.time() < deadline:
+            if col.host_metrics().get(0, {}).get("counters"):
+                break
+            time.sleep(0.02)
+        assert col.host_metrics()[0]["counters"] == {"tokens": 9.0}
+        assert col.gap_report()[0]["missed"] == 0
+    finally:
+        ag.stop()
+        col.stop()
+
+
+def test_agent_buffer_sheds_oldest_under_backpressure():
+    bus = EventBus()
+    ag = TelemetryAgent(0, ("127.0.0.1", 1), bus, buffer_cap=4,
+                        send_filter=lambda h, p: False)
+    bus.subscribe(ag._on_event)
+    for i in range(10):
+        bus.emit("a", "x", step=i)
+    assert ag.shed == 6
+    assert [d["step"] for d in ag._buf] == [6, 7, 8, 9]
+    ag._sock.close()
+
+
+# ---------------------------------------------------------------------------
+# detectors
+# ---------------------------------------------------------------------------
+
+def _step_ev(seconds, host=None, t=0.0):
+    data = {"seconds": seconds}
+    if host is not None:
+        data["host"] = host
+    return Event(seq=0, t_mono=t, t_wall=0.0, subsystem="train",
+                 kind="step", data=data)
+
+
+def test_drift_detector_fires_after_consecutive_and_rearms():
+    det = StepTimeDriftDetector(factor=2.0, consecutive=3, warmup=3)
+    for _ in range(5):
+        assert det.observe(0, _step_ev(0.01)) is None    # healthy baseline
+    assert det.observe(0, _step_ev(0.05)) is None        # streak 1
+    assert det.observe(0, _step_ev(0.05)) is None        # streak 2
+    score = det.observe(0, _step_ev(0.05))               # streak 3: fire
+    assert score is not None and 0.5 <= score <= 1.0
+    # refractory: the streak re-arms from zero, same drift fires again
+    assert det.observe(0, _step_ev(0.05)) is None
+    assert det.observe(0, _step_ev(0.05)) is None
+    assert det.observe(0, _step_ev(0.05)) is not None
+    # the anomalous samples never polluted the EWMA baseline
+    assert det._mean[0] == pytest.approx(0.01, rel=1e-6)
+
+
+def test_drift_detector_needs_warmup_and_tracks_hosts_independently():
+    det = StepTimeDriftDetector(factor=2.0, consecutive=1, warmup=3)
+    # hot-from-the-start host: first samples define its baseline, no fire
+    assert det.observe(0, _step_ev(0.5, host=7)) is None
+    assert det.observe(0, _step_ev(0.5, host=7)) is None
+    # another host's baseline is its own
+    for _ in range(4):
+        det.observe(0, _step_ev(0.01, host=8))
+    assert det.observe(0, _step_ev(0.05, host=8)) is not None
+    assert det.observe(0, _step_ev(0.5, host=7)) is None
+
+
+def test_jitter_detector_fires_on_interarrival_blowup():
+    det = BeatJitterDetector(factor=3.0, consecutive=2, warmup=3)
+    t = 0.0
+    for _ in range(5):                   # healthy cadence: 50 ms
+        t += 0.05
+        assert det.observe_arrival(1, t) is None
+    t += 0.3                             # 6x gap, streak 1
+    assert det.observe_arrival(1, t) is None
+    t += 0.3                             # streak 2: fire
+    assert det.observe_arrival(1, t) is not None
+    assert det.observe(0, _step_ev(9.9)) is None   # event-path is inert
+
+
+def test_scrub_detector_fires_on_burst_not_single_flip():
+    det = ScrubRateDetector(window=3, max_span=60.0)
+
+    def sdc(t):
+        return Event(seq=0, t_mono=t, t_wall=0.0, subsystem="sdc",
+                     kind="corruption", data={"host": 2})
+    assert det.observe(0, sdc(1.0)) is None
+    assert det.observe(0, sdc(2.0)) is None
+    score = det.observe(0, sdc(3.0))     # 3 hits in 2 s: accelerating
+    assert score is not None and score > 0.5
+    assert det.observe(0, sdc(4.0)) is None          # refractory cleared
+    # a slow trickle (window spans > max_span) never fires
+    slow = ScrubRateDetector(window=3, max_span=10.0)
+    for t in (0.0, 20.0, 40.0, 60.0):
+        assert slow.observe(0, sdc(t)) is None
+
+
+def test_anomaly_engine_risk_max_merges_and_decays():
+    fired = []
+    eng = AnomalyEngine(
+        detectors=[StepTimeDriftDetector(factor=2.0, consecutive=1,
+                                         warmup=2)],
+        decay=0.5, on_precursor=lambda h, k, r: fired.append((h, k, r)))
+    emitted = []
+    eng.emit = lambda *a, **kw: emitted.append((a, kw))
+    for _ in range(3):
+        eng.observe_event(4, _step_ev(0.01))
+    eng.observe_event(4, _step_ev(0.08))             # fires, score 1.0
+    assert eng.risk(4) == 1.0
+    assert fired == [(4, "step_time_drift", 1.0)]
+    assert emitted and emitted[0][0] == ("precursor", "step_time_drift")
+    assert emitted[0][1]["host"] == 4
+    # healthy samples decay the risk multiplicatively
+    eng.observe_event(4, _step_ev(0.01))
+    assert eng.risk(4) == pytest.approx(0.5)
+    eng.observe_event(4, _step_ev(0.01))
+    assert eng.risk(4) == pytest.approx(0.25)
+    assert eng.risk_scores() == {4: pytest.approx(0.25)}
+    # its own precursor output is never re-ingested (no feedback loop)
+    n = eng.precursors
+    eng.observe_event(4, Event(seq=0, t_mono=0.0, t_wall=0.0,
+                               subsystem="precursor",
+                               kind="step_time_drift",
+                               data={"host": 4, "seconds": 99.0}))
+    assert eng.precursors == n
+
+
+def test_anomaly_engine_attach_emits_precursors_onto_the_bus():
+    bus = EventBus()
+    eng = AnomalyEngine(detectors=[StepTimeDriftDetector(
+        factor=2.0, consecutive=1, warmup=2)])
+    eng.attach(bus)
+    for _ in range(3):
+        bus.emit("train", "step", seconds=0.01)
+    bus.emit("train", "step", seconds=0.09)
+    pre = bus.events(subsystem="precursor")
+    assert len(pre) == 1
+    assert pre[0].kind == "step_time_drift"
+    assert pre[0].data["host"] == 0 and pre[0].data["risk"] == 1.0
+
+
+def test_make_proactive_hook_threshold_cooldown_and_policy_feed():
+    from repro.core.policy import CheckpointPolicy
+
+    scores = {}
+    policy = CheckpointPolicy(mode="risk_adjusted")
+    hook = make_proactive_hook(lambda: dict(scores), threshold=0.5,
+                               cooldown_steps=5, policy=policy)
+    assert hook(1) is None               # nothing hot
+    assert policy.risk == 0.0
+    scores[3] = 0.9
+    why = hook(2)
+    assert why == "risk:3:0.90"
+    assert policy.risk == pytest.approx(0.9)
+    assert hook(4) is None               # cooling down
+    assert policy.risk == pytest.approx(0.9), \
+        "policy feed must continue through the cooldown"
+    assert hook(7) == "risk:3:0.90"      # cooldown elapsed
+    scores.clear()
+    scores[1], scores[2] = 0.6, 0.8
+    assert hook(20) == "risk:2:0.80"     # hottest host named
+
+
+# ---------------------------------------------------------------------------
+# risk-adjusted Young/Daly
+# ---------------------------------------------------------------------------
+
+def test_policy_risk_adjusted_contracts_interval_and_relaxes_back():
+    from repro.core.policy import CheckpointPolicy, SystemModel
+
+    def make(mode):
+        p = CheckpointPolicy(mode=mode,
+                             system=SystemModel(node_mtbf_seconds=3600.0,
+                                                num_nodes=1,
+                                                restart_seconds=1.0,
+                                                downtime_seconds=1.0))
+        p.observe_step(1.0)
+        p.observe_checkpoint(2.0)
+        return p
+
+    yd, ra = make("young_daly"), make("risk_adjusted")
+    assert ra.interval_steps() == yd.interval_steps(), \
+        "risk 0 must be exactly young_daly"
+    ra.observe_risk(1.0)                 # risk_gain=8 -> mtbf / 9
+    assert ra.interval_steps() < yd.interval_steps()
+    assert ra.interval_steps() >= 1
+    contracted = ra.interval_steps()
+    ra.observe_risk(0.25)
+    assert contracted < ra.interval_steps() < yd.interval_steps()
+    ra.observe_risk(0.0)
+    assert ra.interval_steps() == yd.interval_steps()
+    # clamping: garbage risk never widens or inverts the interval
+    ra.observe_risk(50.0)
+    assert ra.risk == 1.0
+    ra.observe_risk(-3.0)
+    assert ra.risk == 0.0
+    # young_daly ignores the feed entirely
+    yd.observe_risk(1.0)
+    assert yd.interval_steps() == make("young_daly").interval_steps()
+
+
+# ---------------------------------------------------------------------------
+# run_bsp proactive checkpoint hook
+# ---------------------------------------------------------------------------
+
+def test_run_bsp_proactive_hook_forces_save_and_emits(tmp_path):
+    import jax.numpy as jnp
+    from repro.core.api import Dependability, DependabilityConfig
+    from repro.core.coordinator import run_bsp
+    from repro.obs import Observability
+
+    dep = Dependability(DependabilityConfig(
+        checkpoint_dir=str(tmp_path), policy_mode="every_n", every_n=100,
+        signal_detection=False))
+    obs = Observability()
+    dep.attach_obs(obs)
+    dep.start()
+    state = {"step": jnp.array(0), "w": jnp.ones((4,))}
+    dep.register_global_state(state)
+
+    class Data:
+        def next_batch(self):
+            return jnp.ones((4,))
+
+    def train_step(state, batch):
+        return ({"step": state["step"] + 1, "w": state["w"] + 0.01},
+                {"loss": 1.0})
+
+    calls = []
+
+    def hook(step):
+        calls.append(step)
+        return "risk:0:0.90" if step == 5 else None
+
+    state, status, hist = run_bsp(dep, train_step, state, Data(), 8,
+                                  proactive=hook, final_save=False)
+    assert status == "done"
+    assert calls == list(range(1, 9)), "hook polled once per superstep"
+    assert [s.step for s in dep.save_history] == [5], \
+        "exactly the forced save, nothing from the every_n=100 cadence"
+    pro = obs.events("checkpoint", "proactive")
+    assert len(pro) == 1
+    assert pro[0].data == {"step": 5, "reason": "risk:0:0.90"}
+    assert obs.registry.counter("checkpoint.proactive").value == 1
+    # forced saves re-anchor the cadence like any other
+    assert dep.policy._last_ckpt_step == 5
+    dep.stop()
+
+
+def test_run_bsp_cadence_save_wins_over_proactive(tmp_path):
+    """When the policy cadence saves at a step anyway, the hook is not
+    even polled there — no double save, no forced-save event."""
+    import jax.numpy as jnp
+    from repro.core.api import Dependability, DependabilityConfig
+    from repro.core.coordinator import run_bsp
+    from repro.obs import Observability
+
+    dep = Dependability(DependabilityConfig(
+        checkpoint_dir=str(tmp_path), policy_mode="every_n", every_n=2,
+        signal_detection=False))
+    obs = Observability()
+    dep.attach_obs(obs)
+    dep.start()
+    state = {"step": jnp.array(0), "w": jnp.ones((2,))}
+    dep.register_global_state(state)
+
+    class Data:
+        def next_batch(self):
+            return jnp.ones((2,))
+
+    def train_step(state, batch):
+        return ({"step": state["step"] + 1, "w": state["w"]},
+                {"loss": 1.0})
+
+    polled = []
+    state, status, _ = run_bsp(dep, train_step, state, Data(), 6,
+                               proactive=lambda s: polled.append(s),
+                               final_save=False)
+    assert status == "done"
+    assert polled == [1, 3, 5], "cadence steps (2, 4, 6) skip the hook"
+    assert obs.events("checkpoint", "proactive") == []
+    dep.stop()
+
+
+# ---------------------------------------------------------------------------
+# detect -> act invariant
+# ---------------------------------------------------------------------------
+
+def _mk(t, subsystem, kind, **data):
+    return Event(seq=int(t * 1000), t_mono=t, t_wall=0.0,
+                 subsystem=subsystem, kind=kind, data=data)
+
+
+def test_check_detect_before_act_passes_on_correct_ordering():
+    from repro.chaos import check_detect_before_act
+    res = check_detect_before_act([
+        _mk(1.0, "train", "step", step=1),
+        _mk(2.0, "precursor", "step_time_drift", host=2, risk=1.0),
+        _mk(3.0, "checkpoint", "proactive", step=6),
+        _mk(4.0, "serve", "replica_predrained", replica=0, hosts=[2]),
+        _mk(5.0, "heartbeat", "failure", host=2),
+    ])
+    assert res.passed, res.detail
+
+
+def test_check_detect_before_act_fails_without_precursor():
+    from repro.chaos import check_detect_before_act
+    res = check_detect_before_act([
+        _mk(1.0, "checkpoint", "proactive", step=3),
+    ])
+    assert not res.passed and "no precursor" in res.detail
+
+
+def test_check_detect_before_act_fails_on_act_before_precursor():
+    from repro.chaos import check_detect_before_act
+    res = check_detect_before_act([
+        _mk(1.0, "checkpoint", "proactive", step=3),
+        _mk(2.0, "precursor", "step_time_drift", host=0, risk=1.0),
+    ])
+    assert not res.passed
+
+
+def test_check_detect_before_act_fails_on_unpredicted_named_failure():
+    from repro.chaos import check_detect_before_act
+    res = check_detect_before_act([
+        _mk(1.0, "heartbeat", "failure", host=2),
+        _mk(2.0, "precursor", "step_time_drift", host=2, risk=1.0),
+        _mk(3.0, "checkpoint", "proactive", step=6),
+    ])
+    assert not res.passed, \
+        "host 2 failed BEFORE its first precursor — not a prediction"
+
+
+# ---------------------------------------------------------------------------
+# serve pre-drain (fast units)
+# ---------------------------------------------------------------------------
+
+def _tiny_serve():
+    import jax
+    from repro.models import get_config, init_params
+    cfg = get_config("granite-3-8b", tiny=True)
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_engine_pre_drains_risky_replica_and_serves_everything():
+    from repro.serve import ServeEngine
+    cfg, params = _tiny_serve()
+    risk = {}
+    eng = ServeEngine(cfg, params, num_replicas=2, slots_per_replica=2,
+                      max_len=16, risk_source=lambda: dict(risk),
+                      pre_drain_threshold=0.8)
+    rids = [eng.submit([3, 4, 5], 8) for _ in range(4)]
+    eng.step()                           # work lands on both replicas
+    victim_host = eng.router.replicas[1].hosts[0]
+    risk[victim_host] = 0.95
+    eng.step()                           # crossing risk pre-drains now
+    pre = eng.obs.events("serve", "replica_predrained")
+    assert len(pre) == 1
+    assert pre[0].data["replica"] == 1
+    assert pre[0].data["risk"] == pytest.approx(0.95)
+    assert not eng.router.replicas[1].healthy
+    assert eng.router.replicas[1].fail_reason.startswith("predrain:")
+    assert ("replica_predrained", 1) in [
+        (k, i) for k, i, _ in eng.router.events]
+    assert eng.obs.registry.counter("serve.replica_predrains").value == 1
+    res = eng.run()                      # survivor finishes everything
+    assert sorted(res) == sorted(rids)
+    assert eng.scheduler.failed_rids == []
+    # no heartbeat/failure, no replica_failed: a pre-drain is PLANNED —
+    # the Timeline must not open an incident for it
+    assert eng.obs.events("serve", "replica_failed") == []
+    assert Timeline.from_events(eng.obs.events()).incidents == []
+    eng.shutdown()
+
+
+def test_engine_never_pre_drains_the_last_healthy_replica():
+    from repro.serve import ServeEngine
+    cfg, params = _tiny_serve()
+    eng = ServeEngine(cfg, params, num_replicas=1, slots_per_replica=2,
+                      max_len=16,
+                      risk_source=lambda: {0: 1.0},
+                      pre_drain_threshold=0.5)
+    rids = [eng.submit([3, 4, 5], 4) for _ in range(2)]
+    res = eng.run()
+    assert sorted(res) == sorted(rids)
+    assert eng.router.replicas[0].healthy, \
+        "draining the only replica would stop the service"
+    assert eng.obs.events("serve", "replica_predrained") == []
+    eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# E2E (slow): straggle-then-kill, detect -> act, both planes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_e2e_serve_pre_drain_beats_the_kill():
+    """Latency spikes degrade replica 1 (steps 3..14), a kill is
+    scheduled for step 16.  The drift detector fed by the engine's
+    per-replica step timings must push the host's risk past threshold,
+    the engine pre-drains the replica, and the kill never fires (a
+    pre-drained replica is no longer dispatched) — zero drops,
+    token-identical streams, detect-before-act green."""
+    import jax
+    import jax.numpy as jnp
+    from repro.chaos import (check_detect_before_act, check_token_identical,
+                             check_zero_drop, verify)
+    from repro.core import FaultInjector
+    from repro.models import init_cache
+    from repro.obs import Observability
+    from repro.serve import ServeEngine
+    from repro.train import make_decode_step, make_prefill_step
+
+    cfg, params = _tiny_serve()
+    prompts = [list(range(5 + i, 11 + i)) for i in range(4)]
+    gen = 24
+
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+    ref = []
+    for p in prompts:
+        toks = jnp.asarray(p, jnp.int32)[None]
+        tok, row = prefill(params, {"tokens": toks}, init_cache(cfg, 1, 32))
+        s = [int(tok[0])]
+        for _ in range(gen - 1):
+            tok, row = decode(params, {"tokens": tok[:, None]}, row)
+            s.append(int(tok[0]))
+        ref.append(s)
+
+    inj = FaultInjector()
+    for step in range(3, 15):
+        inj.schedule_latency_spike(step, 0.25, replica_id=1)
+    inj.schedule_replica_kill(16, replica_id=1)
+
+    obs = Observability()
+    anomaly = AnomalyEngine(detectors=[StepTimeDriftDetector(
+        factor=2.0, consecutive=3, warmup=3)])
+    anomaly.attach(obs.bus)
+    eng = ServeEngine(cfg, params, num_replicas=2, slots_per_replica=2,
+                      max_len=32, fault_injector=inj, obs=obs,
+                      risk_source=anomaly.risk_scores,
+                      pre_drain_threshold=0.8)
+    rids = [eng.submit(p, gen) for p in prompts]
+    res = eng.run()
+
+    pre = obs.events("serve", "replica_predrained")
+    assert len(pre) == 1 and pre[0].data["replica"] == 1, \
+        "the risky replica must have been pre-drained"
+    assert obs.events("serve", "replica_failed") == [], \
+        "proactive won: the scheduled kill never fired"
+    assert not inj.replica_kills
+    precursors = obs.events(subsystem="precursor")
+    assert precursors, "the drift detector must have fired"
+    assert precursors[0].t_mono < pre[0].t_mono
+    victim_host = eng.router.replicas[1].hosts[0]
+    assert all(p.data["host"] == victim_host for p in precursors)
+
+    verify([check_zero_drop(eng.scheduler, rids),
+            check_token_identical(res, dict(zip(rids, ref))),
+            check_detect_before_act(obs.events())])
+    assert eng.scheduler.retried_rids, "drained requests were re-executed"
+    eng.shutdown()
+
+
+_PRELUDE = """
+import os
+import time
+import jax
+from repro.chaos import (Scenario, run_scenario_elastic, verify,
+                         check_detect_before_act, check_no_lost_steps)
+from repro.core import Dependability, DependabilityConfig, HeartbeatEmitter
+from repro.data import ShardedPipeline
+from repro.launch.mesh import host_device_map
+from repro.models import get_config
+from repro.obs import AnomalyEngine, Observability, make_proactive_hook
+from repro.sharding.api import resolve
+from repro.sharding.rules import state_specs
+from repro.train import init_state, make_train_step
+
+cfg = get_config("granite-3-8b", tiny=True)
+KEY = jax.random.PRNGKey(0)
+PERIOD = 0.05
+
+def shardings_for(mesh):
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    specs = state_specs(cfg, tp)
+    return jax.tree.map(lambda s: resolve(s, mesh), specs,
+                        is_leaf=lambda x: x.__class__.__name__ ==
+                        "PartitionSpec")
+
+_STEP_CACHE = {}
+
+def make_step_for(steps):
+    # memoized per mesh so a pre-warmed jit is REUSED inside the elastic
+    # loop: without this, the first superstep carries seconds of XLA
+    # compile time, which poisons the drift detector's EWMA baseline
+    def make_step(mesh):
+        key = (steps, mesh.axis_names, mesh.devices.shape,
+               tuple(d.id for d in mesh.devices.flat))
+        if key not in _STEP_CACHE:
+            _STEP_CACHE[key] = jax.jit(
+                make_train_step(cfg, total_steps=steps),
+                out_shardings=(shardings_for(mesh), None))
+        return _STEP_CACHE[key]
+    return make_step
+"""
+
+
+def _run(script, devices=8, timeout=600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["CHAOS_SCENARIOS"] = SCENARIOS
+    p = subprocess.run(
+        [sys.executable, "-c", _PRELUDE + textwrap.dedent(script)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+@pytest.mark.slow
+def test_e2e_precursor_storm_proactive_checkpoint(tmp_path):
+    """scenarios/precursor_storm.json through run_elastic with the
+    telemetry plane wired in: host 2 straggles over [4, 10) — every BSP
+    superstep stretches, the drift detector fires precursors — then the
+    host is killed at 10 and rejoins at 16.  The precursor must land
+    BEFORE the kill, force a proactive checkpoint, and the mesh must
+    shrink and re-grow with no lost supersteps."""
+    out = _run(f"""
+    STEPS = 20
+    sc = Scenario.from_json(
+        os.path.join(os.environ["CHAOS_SCENARIOS"],
+                     "precursor_storm.json"))
+    # the storm's deferred kill takes host 2; fail its rack-mate at the
+    # same step so the survivor count keeps a legal (data, model) grid
+    # (6 devices has no tp<=2 factorization that divides the FSDP leaves)
+    sc.kill_hosts([3], at=10).rejoin(3, at=16).validate()
+    hosts = host_device_map(4)               # 4 hosts x 2 devices
+    dep = Dependability(DependabilityConfig(
+        checkpoint_dir=r"{tmp_path}", policy_mode="every_n", every_n=5,
+        heartbeat=True, heartbeat_period=PERIOD,
+        heartbeat_timeout_factor=5.0, signal_detection=False,
+        monitor_hosts=4), host_id=0, num_hosts=1).start()
+    obs = Observability()
+    dep.attach_obs(obs)
+    anomaly = AnomalyEngine()
+    anomaly.attach(obs.bus)
+    hook = make_proactive_hook(anomaly.risk_scores, threshold=0.5)
+    ems = {{h: HeartbeatEmitter(h, dep.monitor.addr, PERIOD).start()
+           for h in (1, 2, 3)}}
+    ems[0] = dep.emitter
+
+    data = ShardedPipeline(cfg, 16, 4, dp_width=4)
+    state = init_state(cfg, KEY)
+    template = jax.eval_shape(lambda: init_state(cfg, KEY))
+
+    # pre-compile the full-mesh step so superstep 1's timing is a real
+    # step, not XLA compile — the detector's baseline must be honest
+    from repro.core.elastic import survivor_mesh
+    make_step = make_step_for(STEPS)
+    mesh0 = survivor_mesh([d for h in sorted(hosts)
+                           for d in hosts[h]], model_axis=2)
+    warm = jax.device_put(state, shardings_for(mesh0))
+    jax.block_until_ready(
+        make_step(mesh0)(warm, data.shards[0].peek_global_batch()))
+    del warm
+
+    state, info = run_scenario_elastic(
+        dep, make_step_for(STEPS), state, data, STEPS, scenario=sc,
+        emitters=ems, host_devices=hosts, model_axis=2, like=template,
+        shardings_fn=shardings_for, step_seconds=0.3, proactive=hook)
+
+    assert info["status"] == "done", info["status"]
+    kinds = [e.kind for e in info["events"]]
+    assert "shrink" in kinds and "grow" in kinds, kinds
+    shrunk = [h for e in info["events"] if e.kind == "shrink"
+              for h in e.hosts]
+    assert sorted(shrunk) == [2, 3], shrunk
+    assert info["dp"] == 4                   # hosts 2+3 healed
+
+    evs = obs.events()
+    pre = [e for e in evs if e.subsystem == "precursor"]
+    assert pre, "the drift detector must have fired during the storm"
+    forced = [e for e in evs
+              if (e.subsystem, e.kind) == ("checkpoint", "proactive")]
+    assert forced, "a precursor must have forced a checkpoint"
+    fails = [e for e in evs
+             if (e.subsystem, e.kind) == ("heartbeat", "failure")]
+    assert fails and all(p.t_mono < f.t_mono for p in pre[:1]
+                         for f in fails), \
+        "detection must precede the kill's heartbeat failure"
+    assert forced[0].data["step"] < 10, \
+        "the proactive checkpoint must land before the kill step"
+    verify([check_detect_before_act(evs),
+            check_no_lost_steps(info["history"], STEPS)])
+
+    for em in ems.values():
+        em.stop()
+    dep.stop()
+    print("precursor storm OK: precursors=", len(pre),
+          "forced_saves=", [e.data["step"] for e in forced],
+          "events=", kinds)
+    """, devices=8)
+    assert "precursor storm OK" in out
+
+
+# ---------------------------------------------------------------------------
+# chaos schema: precursor_storm scenario kind
+# ---------------------------------------------------------------------------
+
+def test_precursor_storm_scenario_round_trip_and_validation(tmp_path):
+    from repro.chaos import Scenario, ScenarioError
+
+    sc = Scenario.from_json(os.path.join(SCENARIOS,
+                                         "precursor_storm.json"))
+    ev = next(e for e in sc.events if e.kind == "precursor_storm")
+    assert ev.args == {"host": 2, "factor": 4.0, "kill": True}
+    assert (ev.at, ev.until) == (4.0, 10.0)
+    p = str(tmp_path / "round.json")
+    sc.to_json(p)
+    assert Scenario.from_json(p).to_dict() == sc.to_dict()
+
+    with pytest.raises(ScenarioError):
+        Scenario("bad").precursor_storm(1, factor=1.0, window=(2, 5))
+    # the deferred kill participates in kill/rejoin timeline validation:
+    # rejoining a host before its storm's kill-at-window-end is an error
+    bad = Scenario("bad2")
+    bad.precursor_storm(1, factor=3.0, window=(2, 8))
+    bad.rejoin(1, at=5)
+    with pytest.raises(ScenarioError):
+        bad.validate()
+
+
+def test_precursor_storm_drives_sim_and_dead_intervals():
+    from repro.chaos import ControlPlaneSim, Scenario
+
+    sc = Scenario("storm", clock="step")
+    sc.precursor_storm(2, factor=4.0, window=(3, 7))
+    sc.rejoin(2, at=20)
+    rep = ControlPlaneSim(4, devices_per_host=2).run(sc)
+    assert any(d["host"] == 2 for d in rep.detections), \
+        "the sim must see the storm's deferred kill"
+    from repro.chaos.driver import TrainScenarioDriver
+
+    class _Em:
+        def pause(self):
+            pass
+
+        def resume(self):
+            pass
+    drv = TrainScenarioDriver(sc, emitters={h: _Em() for h in range(4)},
+                              settle_seconds=0.0)
+    assert drv.dead_intervals() == {2: [(7.0, 20.0)]}
+    assert len(drv.injector.pending()) == 4, \
+        "one straggle per storm step [3, 7)"
