@@ -30,6 +30,11 @@ test -f tests/test_elastic_3d.py
 # and the telemetry-plane suite (tests/test_telemetry.py: wire/merge/
 # detector/policy units + the straggle-then-kill E2Es, marked `slow`)
 test -f tests/test_telemetry.py
+# and the paged-KV-cache suite (tests/test_paged.py: allocator/refcount
+# units, paged-vs-slot bit-identity, prefix sharing + the 100-stream
+# flash-crowd failover E2E, marked `slow`; paged kernel sweeps live in
+# tests/test_kernels.py)
+test -f tests/test_paged.py
 ARGS=()
 for a in "$@"; do
   if [ "$a" = "--fast" ]; then

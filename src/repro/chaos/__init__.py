@@ -17,6 +17,7 @@ from repro.chaos.invariants import (InvariantResult, InvariantViolation,
                                     check_monotonic_drain,
                                     check_no_dead_growth,
                                     check_no_lost_steps,
+                                    check_page_conservation,
                                     check_token_identical,
                                     check_trajectory_match, check_zero_drop,
                                     pass_rate, summarize, verify)
@@ -30,7 +31,8 @@ __all__ = [
     "ServeScenarioDriver", "SimReport", "TrainScenarioDriver",
     "WINDOW_KINDS", "check_conservation", "check_detect_before_act",
     "check_monotonic_drain",
-    "check_no_dead_growth", "check_no_lost_steps", "check_token_identical",
+    "check_no_dead_growth", "check_no_lost_steps",
+    "check_page_conservation", "check_token_identical",
     "check_trajectory_match", "check_zero_drop", "pass_rate",
     "run_scenario_elastic", "summarize", "verify",
 ]

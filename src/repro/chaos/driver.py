@@ -427,6 +427,7 @@ class ServeScenarioDriver:
         self.submitted_rids: List[int] = []
         self.prompts: Dict[int, List[int]] = {}   # rid -> prompt
         self.samples: List[Dict[str, int]] = []
+        self.page_samples: List[Dict[str, int]] = []   # paged engines only
         self.drained_series: List[int] = []
         self._gates_on: set = set()
         self._prompt_rng = random.Random(f"{scenario.seed}/prompts")
@@ -552,6 +553,11 @@ class ServeScenarioDriver:
             "queued": sched.pending(),
             "in_flight": len(sched.in_flight()),
         })
+        if getattr(self.engine, "paged", False):
+            # page accounting rides along every request-conservation
+            # sample: free + held == total and refcounts consistent at
+            # every step, across kills and drains (check_page_conservation)
+            self.page_samples.append(self.engine.page_conservation())
         self.drained_series.append(len(sched.retried_rids))
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:

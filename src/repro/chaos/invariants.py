@@ -177,6 +177,34 @@ def check_conservation(samples: Sequence[Dict[str, int]]) -> InvariantResult:
     return _ok("request-conservation", f"{len(samples)} samples balanced")
 
 
+def check_page_conservation(samples: Sequence[Dict[str, int]]
+                            ) -> InvariantResult:
+    """Paged-KV accounting (serve/page_table.py): at every sample,
+    free + held == total, reservations never exceed the free list, and
+    the pool's refcount audit came back clean — across admissions, prefix
+    sharing, copy-on-write, and ``release_all`` drains.  A violation is a
+    page leak or double-free.  Samples come from
+    ``ServeEngine.page_conservation()`` (``ServeScenarioDriver`` records
+    one per step in ``page_samples``)."""
+    if not samples:
+        return _bad("page-conservation",
+                    "no page samples recorded (engine not paged?)")
+    for i, s in enumerate(samples):
+        if s["pages_free"] + s["pages_held"] != s["pages_total"]:
+            return _bad("page-conservation",
+                        f"sample {i}: free={s['pages_free']} + "
+                        f"held={s['pages_held']} != "
+                        f"total={s['pages_total']}")
+        if s["pages_reserved"] > s["pages_free"]:
+            return _bad("page-conservation",
+                        f"sample {i}: {s['pages_reserved']} pages "
+                        f"reserved but only {s['pages_free']} free")
+        if not s["refs_ok"]:
+            return _bad("page-conservation",
+                        f"sample {i}: refcount audit failed ({s})")
+    return _ok("page-conservation", f"{len(samples)} samples balanced")
+
+
 # ---------------------------------------------------------------------------
 # telemetry plane
 # ---------------------------------------------------------------------------

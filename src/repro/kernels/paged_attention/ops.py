@@ -1,0 +1,72 @@
+"""Public paged decode-attention wrapper: engine layout, impl switch.
+
+Two production paths behind one signature:
+
+- ``impl="ref"`` (default off-TPU): gather ``k_pages[page_tables]`` into
+  each request's contiguous logical cache and run the *exact* slot-pool
+  decode math — a vmap over ``repro.layers.attention.decode_mha`` with
+  ``cache_pos = arange``.  Because the per-example computation graph is
+  identical to the legacy contiguous-slot path (same shapes, same masked
+  NEG_INF softmax), greedy streams stay bit-identical to the slot pool,
+  which is the failover determinism contract the paged refactor must
+  keep (tests/test_paged.py pins this).
+- ``impl="pallas"``: the PrefetchScalarGridSpec kernel — no gather, the
+  page table is chased in the k/v index_map (kernel.py).
+
+Pages use the serve layout (P, ps, K, hd); the kernel wants KV-head
+major (P, K, ps, hd), transposed here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_rkgd
+from repro.layers.attention import decode_mha
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _ref_path(q, k_pages, v_pages, page_tables, lengths, *,
+              window, softcap, scale):
+    R = q.shape[0]
+    P, ps, K, hd = k_pages.shape
+    MPR = page_tables.shape[1]
+    kc = k_pages[page_tables].reshape(R, MPR * ps, K, hd)
+    vc = v_pages[page_tables].reshape(R, MPR * ps, K, hd)
+    cache_pos = jnp.arange(MPR * ps, dtype=jnp.int32)
+
+    def one(qr, kr, vr, cur):
+        # qr: (1, H, hd) -> decode_mha's (B=1, 1, H, hd); [0] back to (1,H,hd)
+        return decode_mha(qr[None], kr[None], vr[None], cache_pos, cur,
+                          window=window, softcap=softcap, scale=scale)[0]
+
+    return jax.vmap(one)(q, kc, vc, lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "impl", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, page_tables, lengths, *,
+                           window=0, softcap=0.0, scale=None,
+                           impl="ref", interpret=None):
+    """q: (R, 1, H, hd); k_pages/v_pages: (P, ps, K, hd);
+    page_tables: (R, MPR) int32; lengths: (R,) int32 — the query's
+    position (it attends 0..lengths[r]).  Returns (R, 1, H, hd)."""
+    R, S, H, hd = q.shape
+    assert S == 1, "paged attention decodes one token per request"
+    if impl == "pallas":
+        interpret = _default_interpret() if interpret is None else interpret
+        K = k_pages.shape[2]
+        qk = q[:, 0].reshape(R, K, H // K, hd)
+        kt = jnp.swapaxes(k_pages, 1, 2)     # (P, K, ps, hd)
+        vt = jnp.swapaxes(v_pages, 1, 2)
+        o = paged_attention_rkgd(qk, kt, vt, page_tables, lengths,
+                                 window=window, softcap=softcap,
+                                 scale=scale, interpret=interpret)
+        return o.reshape(R, 1, H, hd)
+    return _ref_path(q, k_pages, v_pages, page_tables, lengths,
+                     window=window, softcap=softcap, scale=scale)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for paged gather-decode attention.
+
+One query token per request attends a KV cache that lives in a shared
+block-paged pool: ``k_pages``/``v_pages`` hold ``num_pages`` pages of
+``page_size`` tokens each, and a per-request page table maps the
+request's logical token positions onto physical pages (logical position
+``t`` lives in page ``page_table[r, t // page_size]`` at offset
+``t % page_size``).  Page id 0 is the reserved null page — table entries
+pointing at it are either unallocated (masked out by the length bound)
+or dead padding.
+
+The oracle materializes every request's gathered cache and runs plain
+masked softmax attention — the memory-hungry shape the Pallas kernel
+exists to avoid."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_tables, lengths, *,
+                        window: int = 0, softcap: float = 0.0,
+                        scale=None):
+    """q: (R, H, hd); k_pages/v_pages: (P, ps, K, hd);
+    page_tables: (R, MPR) int32; lengths: (R,) int32 — the query token's
+    position (it attends positions 0..lengths[r] inclusive, i.e. its own
+    just-written slot plus the history).  Returns (R, H, hd)."""
+    R, H, hd = q.shape
+    P, ps, K, _ = k_pages.shape
+    MPR = page_tables.shape[1]
+    G = H // K
+    scale = scale if scale else hd ** -0.5
+
+    # gather each request's pages into a contiguous logical cache
+    kc = k_pages[page_tables].reshape(R, MPR * ps, K, hd)
+    vc = v_pages[page_tables].reshape(R, MPR * ps, K, hd)
+    qq = (q * jnp.asarray(scale, q.dtype)).reshape(R, K, G, hd)
+    logits = jnp.einsum("rkgd,rtkd->rkgt", qq, kc,
+                        preferred_element_type=jnp.float32)
+    if softcap and softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    t = jnp.arange(MPR * ps, dtype=jnp.int32)[None, :]       # (1, T)
+    cur = lengths[:, None]
+    ok = t <= cur
+    if window and window > 0:
+        ok = ok & (cur - t < window)
+    logits = jnp.where(ok[:, None, None, :], logits, NEG_INF)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("rkgt,rtkd->rkgd", p.astype(vc.dtype), vc,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(R, H, hd).astype(q.dtype)

@@ -1,13 +1,18 @@
 """Serving driver: the dependable serving engine (docs/serving.md).
 
 Thin CLI over ``repro.serve.ServeEngine`` — continuous batching over a
-slot cache pool, N replicas with heartbeat failover, decode-path SDC
-sentinel.  The old fixed-batch demo is what examples/serve_lm.py still
-shows; this driver serves a request stream.
+block-paged KV cache with prefix sharing (the default; ``--legacy-pool``
+forces the old fixed-slot pool), N replicas with heartbeat failover,
+decode-path SDC sentinel.  The old fixed-batch demo is what
+examples/serve_lm.py still shows; this driver serves a request stream.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --tiny \
         --requests 8 --prompt-len 32 --gen 32 \
         --replicas 2 --slots 4 --fault-tolerant --kill-replica-at 5
+
+    # push concurrency past the slot budget at the same memory
+    PYTHONPATH=src python -m repro.launch.serve --tiny --requests 32 \
+        --slots 4 --max-active 16
 """
 from __future__ import annotations
 
@@ -36,7 +41,30 @@ def main(argv=None) -> int:
                     help="model replicas in the serving pool")
     ap.add_argument("--slots", type=int, default=4,
                     help="KV-cache slots per replica (max in-flight "
-                    "requests each)")
+                    "requests each); under --paged this sizes the "
+                    "default equal-memory page pool")
+    pool = ap.add_mutually_exclusive_group()
+    pool.add_argument("--paged", action="store_true", default=None,
+                      dest="paged",
+                      help="block-paged KV cache with prefix sharing "
+                      "(docs/serving.md); the default wherever the model "
+                      "supports it")
+    pool.add_argument("--legacy-pool", action="store_false", dest="paged",
+                      help="force the legacy fixed-slot pool (the "
+                      "equal-memory bench comparator)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page (default 16)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pages in each replica's pool (default: the slot "
+                    "pool's memory budget, repaged)")
+    ap.add_argument("--max-active", type=int, default=None,
+                    help="decode rows per replica under --paged (default: "
+                    "--slots); raise it to push concurrency past the "
+                    "slot count at the same memory")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable refcounted prefix sharing between "
+                    "requests")
+    ap.set_defaults(paged=None)         # auto: paged where supported
     ap.add_argument("--fault-tolerant", action="store_true",
                     help="heartbeat monitoring + decode sentinel + "
                     "failover (re-execute drained requests on survivors)")
@@ -94,13 +122,20 @@ def main(argv=None) -> int:
         anomaly.attach(obs.bus)
         risk_source = anomaly.risk_scores
 
+    paged_kw = {}
+    if args.page_size is not None:
+        paged_kw["page_size"] = args.page_size
     engine = ServeEngine(cfg, params, num_replicas=args.replicas,
                          slots_per_replica=args.slots,
                          max_len=args.prompt_len + args.gen,
                          fault_tolerant=fault_tolerant,
                          fault_injector=injector, obs=obs,
                          risk_source=risk_source,
-                         pre_drain_threshold=args.risk_threshold)
+                         pre_drain_threshold=args.risk_threshold,
+                         paged=args.paged, num_pages=args.num_pages,
+                         max_active=args.max_active,
+                         prefix_cache=not args.no_prefix_cache,
+                         **paged_kw)
     ckpt_dir = None
     if args.standbys > 0:
         # warm-standby params come back through restore_latest — the same
@@ -126,11 +161,27 @@ def main(argv=None) -> int:
     total = sorted(t for _, _, t in lat)
     done_tokens = sum(len(v) for v in results.values())
     prefill_tokens = args.prompt_len * len(lat)
+    pool_txt = (f"{engine.fns.max_active} paged rows "
+                f"({engine.fns.num_pages} x {engine.fns.page_size}-token "
+                f"pages)" if engine.paged else f"{args.slots} slots")
     print(f"served {len(results)}/{args.requests} requests "
           f"({done_tokens} tokens) in {wall:.2f}s on {args.replicas} "
-          f"replica(s) x {args.slots} slots "
+          f"replica(s) x {pool_txt} "
           f"-> {done_tokens / wall:.0f} tok/s decode, "
           f"{prefill_tokens / wall:.0f} tok/s prefill-amortized")
+    if engine.paged:
+        cons = engine.page_conservation()
+        hits = sum(r.pool.prefix_hits
+                   for r in engine.router.replicas.values())
+        misses = sum(r.pool.prefix_misses
+                     for r in engine.router.replicas.values())
+        total_lookups = hits + misses
+        hit_txt = (f"{hits}/{total_lookups} "
+                   f"({hits / total_lookups:.0%})" if total_lookups
+                   else "0/0")
+        print(f"paged KV: prefix hits {hit_txt}, "
+              f"{cons['pages_free']}/{cons['pages_total']} pages free, "
+              f"refcounts {'ok' if cons['refs_ok'] else 'DRIFTED'}")
     if total:
         print(f"latency  p50={statistics.median(total) * 1e3:.0f}ms "
               f"p99={pctl(total, 0.99) * 1e3:.0f}ms "

@@ -9,7 +9,8 @@ from repro.models.base import (
     list_archs,
     register,
 )
-from repro.models.transformer import forward, init_cache, init_params
+from repro.models.transformer import (forward, init_cache,
+                                      init_paged_cache, init_params)
 
 __all__ = [
     "ModelConfig",
@@ -18,6 +19,7 @@ __all__ = [
     "register",
     "forward",
     "init_cache",
+    "init_paged_cache",
     "init_params",
     "FULL",
     "LOCAL",

@@ -134,6 +134,36 @@ def _cache_entry_init(cfg, kind, batch, cache_len):
     raise ValueError(kind)
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Block-paged KV pool (serve/page_table.py): one shared pool of
+    ``num_pages`` pages of ``page_size`` tokens per attention layer, in
+    place of per-request contiguous rows.  Page 0 is the reserved null
+    page.  Only attention stacks page — SSM/REC state has no sequence
+    axis to page over (the legacy slot pool still serves those)."""
+    kinds = cfg.layer_kinds()
+    bad = sorted({k for k in kinds if k not in (FULL, LOCAL)})
+    if bad:
+        raise ValueError(f"paged KV cache needs an attention-only decode "
+                         f"stack; {cfg.name} has {bad} layers")
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def entry():
+        return {"k": jnp.zeros((num_pages, page_size, kv, hd), cfg.dtype),
+                "v": jnp.zeros((num_pages, page_size, kv, hd), cfg.dtype)}
+
+    if cfg.scan_layers:
+        P_ = len(cfg.pattern)
+        G = cfg.num_layers // P_
+
+        def stack(e):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (G,) + x.shape), e)
+
+        return {"blocks": {f"l{p}": stack(entry()) for p in range(P_)}}
+    return {"layers": {f"layer_{i}": entry()
+                       for i in range(cfg.num_layers)}}
+
+
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
     kinds = cfg.layer_kinds()
     if cfg.scan_layers:
@@ -191,7 +221,7 @@ def _head_mask(cfg: ModelConfig):
 
 
 def _attn_apply(p, x, kind, cfg: ModelConfig, positions, cache=None,
-                impl="auto"):
+                impl="auto", page_tables=None):
     cd = cfg.dtype
     a = p["attn"]
     B, S = x.shape[0], x.shape[1]
@@ -216,7 +246,25 @@ def _attn_apply(p, x, kind, cfg: ModelConfig, positions, cache=None,
         q, k = _rope_q_k(cfg, q, k, positions)
 
     new_cache = None
-    if cache is not None and S == 1:                     # decode
+    if page_tables is not None:                          # paged decode
+        from repro.kernels.paged_attention.ops import paged_decode_attention
+
+        ps = cache["k"].shape[1]
+        lengths = positions[:, 0].astype(jnp.int32)      # (R,)
+        ridx = jnp.arange(B)
+        # write this step's k/v at logical position lengths[r]; inactive
+        # rows (zeroed table, length 0) land on the null page 0, which the
+        # length mask keeps out of every real request's softmax
+        pidx = page_tables[ridx, lengths // ps]
+        off = lengths % ps
+        kc = cache["k"].at[pidx, off].set(k[:, 0].astype(cd))
+        vc = cache["v"].at[pidx, off].set(v[:, 0].astype(cd))
+        o = paged_decode_attention(
+            q, kc, vc, page_tables, lengths, window=window,
+            softcap=cfg.attn_softcap, scale=scale,
+            impl=("pallas" if impl == "pallas" else "ref"))
+        new_cache = {"k": kc, "v": vc}
+    elif cache is not None and S == 1:                   # decode
         sc = cache["k"].shape[1]
         cur = positions[0, 0, 0] if cfg.mrope_sections else positions[0, 0]
         slot = cur % sc
@@ -279,9 +327,11 @@ def _attn_apply(p, x, kind, cfg: ModelConfig, positions, cache=None,
     return x, new_cache, aux
 
 
-def _apply_layer(p, x, kind, cfg, positions, cache=None, impl="auto"):
+def _apply_layer(p, x, kind, cfg, positions, cache=None, impl="auto",
+                 page_tables=None):
     if kind in (FULL, LOCAL, BIDIR):
-        return _attn_apply(p, x, kind, cfg, positions, cache, impl)
+        return _attn_apply(p, x, kind, cfg, positions, cache, impl,
+                           page_tables)
     if kind == SSM:
         y, nc = ssm_apply(p, x, cfg, cache, use_pallas=cfg.use_pallas)
         return y, nc, jnp.zeros((), jnp.float32)
@@ -422,7 +472,15 @@ def forward(cfg: ModelConfig, params, batch, *, mode: str = "train",
     params = _cast_params(cfg, params)
     x = _embed_in(cfg, params, batch)
     B, S = x.shape[0], x.shape[1]
-    if mode == "decode":
+    page_tables = None
+    if mode == "paged_decode":
+        if cfg.mrope_sections:
+            raise ValueError("paged decode does not support M-RoPE")
+        # one token per request at its own position; the page table maps
+        # logical positions onto the shared pool (init_paged_cache)
+        page_tables = batch["page_tables"]
+        positions = batch["lengths"].astype(jnp.int32)[:, None]   # (R, 1)
+    elif mode == "decode":
         offset = cache["index"]
         positions = _positions_for(cfg, batch, 1, offset)
     else:
@@ -436,7 +494,8 @@ def forward(cfg: ModelConfig, params, batch, *, mode: str = "train",
     # Per-layer remat: each layer recomputes from its own input in the
     # backward pass (saved residual = one (B,S,D) tensor per layer).
     def apply_one(p, xc, kind, entry, layer_remat=True):
-        fn = functools.partial(_apply_layer, impl=impl)
+        fn = functools.partial(_apply_layer, impl=impl,
+                               page_tables=page_tables)
         if remat_on and layer_remat:
             fn = jax.checkpoint(fn, static_argnums=(2, 3), prevent_cse=False)
         return fn(p, xc, kind, cfg, positions, entry)
@@ -470,8 +529,12 @@ def forward(cfg: ModelConfig, params, batch, *, mode: str = "train",
             fn, (x, aux_total), (params["blocks"], blk_cache_xs))
         new_cache = None
         if cache is not None:
-            new_cache = {"blocks": ys,
-                         "index": cache["index"] + (S if mode != "decode" else 1)}
+            if mode == "paged_decode":                   # pool has no index
+                new_cache = {"blocks": ys}
+            else:
+                new_cache = {"blocks": ys,
+                             "index": cache["index"]
+                             + (S if mode != "decode" else 1)}
     else:
         new_layers = {}
         for i in range(cfg.num_layers):
@@ -483,8 +546,12 @@ def forward(cfg: ModelConfig, params, batch, *, mode: str = "train",
                 new_layers[name] = nc
         new_cache = None
         if cache is not None:
-            new_cache = {"layers": new_layers,
-                         "index": cache["index"] + (S if mode != "decode" else 1)}
+            if mode == "paged_decode":                   # pool has no index
+                new_cache = {"layers": new_layers}
+            else:
+                new_cache = {"layers": new_layers,
+                             "index": cache["index"]
+                             + (S if mode != "decode" else 1)}
 
     logits = _logits_out(cfg, params, x)
     return logits, new_cache, aux_total

@@ -1,14 +1,21 @@
 """repro.serve — the dependable serving engine (docs/serving.md).
 
 Continuous-batching inference with the dependability guarantees training
-already has: a slot-based KV-cache pool so prefill of new requests
-interleaves with decode of in-flight ones, N model replicas registered
-with the heartbeat monitor, and detect-and-recover failover — a dead or
-sentinel-flagged replica's requests drain back to the queue and re-execute
-on survivors with token-identical greedy streams.
+already has: a block-paged KV cache (``PagedKVCache`` — shared page pool,
+per-request page tables, refcounted prefix sharing) so concurrency scales
+with tokens instead of slots, N model replicas registered with the
+heartbeat monitor, and detect-and-recover failover — a dead or
+sentinel-flagged replica's requests drain back to the queue (page tables
+and prefix refs released leak-free) and re-execute on survivors with
+token-identical greedy streams.  The legacy slot pool (``CachePool``)
+remains the fallback for SSM/REC decode stacks and the equal-memory
+benchmark comparator.
 """
 from repro.serve.cache_pool import CachePool, PoolExhausted
 from repro.serve.engine import ServeEngine, pctl
+from repro.serve.page_table import (DEFAULT_PAGE_SIZE, AdmitPlan,
+                                    PagedKVCache, PageExhausted,
+                                    PrefixEntry)
 from repro.serve.replica import (Replica, ServeFns, make_standby_source,
                                  restore_standby_params)
 from repro.serve.router import NoHealthyReplicasError, ReplicaRouter
@@ -23,6 +30,11 @@ __all__ = [
     "QueueFull",
     "CachePool",
     "PoolExhausted",
+    "PagedKVCache",
+    "PageExhausted",
+    "AdmitPlan",
+    "PrefixEntry",
+    "DEFAULT_PAGE_SIZE",
     "Replica",
     "ServeFns",
     "ReplicaRouter",

@@ -46,11 +46,20 @@ import numpy as np
 
 from repro.core.failures import CorruptionDetected, SimulatedFailure
 from repro.core.heartbeat import HeartbeatMonitor
+from repro.models.base import FULL, LOCAL
 from repro.obs import Observability
 from repro.sdc import DecodeSentinel
+from repro.serve.page_table import DEFAULT_PAGE_SIZE, PageExhausted
 from repro.serve.replica import Replica, ServeFns
 from repro.serve.router import NoHealthyReplicasError, ReplicaRouter
 from repro.serve.scheduler import DECODE, Scheduler
+
+
+def _supports_paging(cfg) -> bool:
+    """Paged KV needs an attention-only decode stack (SSM/REC state has
+    no sequence axis to page) and plain RoPE positions."""
+    return (all(k in (FULL, LOCAL) for k in cfg.layer_kinds())
+            and not cfg.mrope_sections)
 
 
 def pctl(xs, q: float) -> float:
@@ -77,7 +86,12 @@ class ServeEngine:
                  obs: Optional[Observability] = None,
                  risk_source: Optional[Callable[[], Dict[int, float]]]
                  = None,
-                 pre_drain_threshold: float = 0.8):
+                 pre_drain_threshold: float = 0.8,
+                 paged: Optional[bool] = None,
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 num_pages: Optional[int] = None,
+                 max_active: Optional[int] = None,
+                 prefix_cache: bool = True):
         if not cfg.has_decode:
             raise ValueError(f"{cfg.name} is encoder-only; cannot serve "
                              "autoregressive decode")
@@ -85,11 +99,23 @@ class ServeEngine:
             raise ValueError(f"{cfg.name} takes embedding inputs; the "
                              "engine serves token prompts")
         self.cfg = cfg
+        # the paged pool is the default memory stack wherever the model
+        # supports it; paged=False forces the legacy slot pool (kept as
+        # the SSM/REC fallback and the equal-memory bench comparator)
+        if paged is None:
+            paged = _supports_paging(cfg)
+        elif paged and not _supports_paging(cfg):
+            raise ValueError(f"{cfg.name} cannot page its KV cache "
+                             "(non-attention decode state or M-RoPE)")
+        self.paged = paged
         # telemetry: the engine's event history lives on the obs bus (the
         # old ``self.events`` list survives as a read-only property view);
         # a shared Observability correlates serving with the other planes
         self.obs = obs if obs is not None else Observability()
-        self.fns = ServeFns(cfg, slots_per_replica, max_len, impl=impl)
+        self.fns = ServeFns(cfg, slots_per_replica, max_len, impl=impl,
+                            paged=paged, page_size=page_size,
+                            num_pages=num_pages, max_active=max_active,
+                            prefix_cache=prefix_cache)
         self.scheduler = Scheduler(max_pending=max_pending,
                                    max_retries=max_retries)
         self.injector = fault_injector
@@ -115,7 +141,8 @@ class ServeEngine:
         self.router = ReplicaRouter(self.fns, self.monitor,
                                     heartbeat_period=heartbeat_period,
                                     sentinel_factory=sentinel_factory,
-                                    hosts_per_replica=hosts_per_replica)
+                                    hosts_per_replica=hosts_per_replica,
+                                    registry=self.obs.registry)
         for _ in range(num_replicas):
             self.router.add_replica(params)
         self.engine_step = 0
@@ -174,6 +201,22 @@ class ServeEngine:
         return {r.rid: list(r.tokens)
                 for r in self.scheduler.reap_finished()}
 
+    def page_conservation(self) -> Dict[str, int]:
+        """Aggregate page-accounting sample over every replica's pool
+        (chaos invariant: pages_free + pages_held == pages_total and
+        refcounts consistent, at every sample — see
+        ``chaos.invariants.check_page_conservation``).  Dead replicas
+        count too: their drained pools must sit fully free."""
+        agg = {"pages_total": 0, "pages_free": 0, "pages_held": 0,
+               "pages_reserved": 0, "refs_ok": 1}
+        for rep in self.router.replicas.values():
+            s = rep.pool.conservation()
+            for k in ("pages_total", "pages_free", "pages_held",
+                      "pages_reserved"):
+                agg[k] += s[k]
+            agg["refs_ok"] &= s["refs_ok"]
+        return agg
+
     def request_latencies(self) -> List[Tuple[int, float, float]]:
         """[(rid, time-to-first-token, total latency), ...] for DONE
         requests.  A retried request's TTFT is measured to its RETRY's
@@ -216,6 +259,14 @@ class ServeEngine:
         reg.gauge("serve.queue_depth").set(self.scheduler.pending())
         reg.gauge("serve.in_flight").set(len(self.scheduler.in_flight()))
         reg.gauge("serve.healthy_replicas").set(len(healthy))
+        if self.paged:
+            # memory-pressure view for the telemetry plane + pre-drain
+            # risk logic (docs/observability.md)
+            reg.gauge("serve.pages_free").set(
+                sum(r.pool.free_pages for r in self.router.healthy()))
+            reg.gauge("serve.prefix_hits").set(
+                sum(r.pool.prefix_hits
+                    for r in self.router.replicas.values()))
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
         """Drive ``step`` until every request is DONE (or FAILED past its
@@ -263,8 +314,16 @@ class ServeEngine:
             # requeue clears t_first_token: the retry restamps the stream
             self.scheduler.requeue(self.scheduler.requests[r])
         drain_s = time.perf_counter() - t0
+        extra = {}
+        if self.paged and rep.pool.last_drain is not None:
+            # page tables + prefix refcounts are part of the drained-
+            # request state: the event carries what each retried stream
+            # held, and release_all already audited zero leak/double-free
+            extra = {"pages_drained": rep.pool.last_drain["pages_freed"],
+                     "prefix_entries_dropped":
+                         rep.pool.last_drain["prefix_entries"]}
         self._record("replica_failed", replica=rep.id, reason=reason,
-                     drained=len(drained), hosts=list(rep.hosts))
+                     drained=len(drained), hosts=list(rep.hosts), **extra)
         reg = self.obs.registry
         reg.histogram("serve.failover_drain_ms").observe(drain_s * 1e3)
         reg.counter("serve.replica_failures").inc()
@@ -328,6 +387,9 @@ class ServeEngine:
                           seconds=time.perf_counter() - t0)
 
     def _admit(self, rep: Replica) -> None:
+        if self.paged:
+            self._admit_paged(rep)
+            return
         admitted = 0
         while (rep.pool.free_count > 0 and self.scheduler.pending() > 0
                and admitted < self.max_prefill_per_step):
@@ -336,24 +398,84 @@ class ServeEngine:
             self.scheduler.start_prefill(req, slot, rep.id)
             tok0, row = rep.prefill(req.prompt)
             rep.pool.write_row(slot, row)
-            self.scheduler.start_decode(req, tok0)
-            req.t_first_token = time.perf_counter()
-            self.obs.registry.histogram("serve.ttft_ms").observe(
-                (req.t_first_token - req.t_submit) * 1e3)
-            if req.retries > 0:
-                # a drained request's retry produced its first client-
-                # visible token: the failover incident is repaired
-                self._record("retry_first_token", rid=req.rid,
-                             retries=req.retries)
+            self._first_token(rep, req, slot, tok0)
             admitted += 1
-            if req.remaining == 0:       # max_new_tokens == 1
-                self._finish(rep, req, slot)
+
+    def _admit_paged(self, rep: Replica) -> None:
+        """Page-aware admission: a request leaves the queue only when the
+        pool can cover its prompt pages AND a worst-case-growth
+        reservation (prompt + max_new_tokens, plus copy-on-write
+        allowance) — so decode can never strand an admitted stream on an
+        empty free list.  An exact full-prompt prefix hit skips the
+        prefill entirely: the cached pages attach read-only and the
+        stream opens with the stored first greedy token (bit-identical —
+        it came from the original prefill's argmax)."""
+        admitted = 0
+        pool = rep.pool
+        while (self.scheduler.pending() > 0
+               and admitted < self.max_prefill_per_step):
+            nxt = self.scheduler.peek_queued()
+            if not pool.can_admit(nxt.prompt, nxt.max_new_tokens):
+                break
+            req = self.scheduler.pop_queued()
+            try:
+                row, plan = pool.acquire(req.rid, req.prompt,
+                                         req.max_new_tokens)
+            except PageExhausted:
+                # can_admit's reclaimable estimate is conservative but an
+                # entry pinned by the plan can still starve it — put the
+                # request back untouched and try next step
+                self.scheduler._queue.appendleft(req.rid)
+                break
+            self.scheduler.start_prefill(req, row, rep.id)
+            if plan.skip_prefill:
+                tok0 = plan.first_token
+                self._record("prefix_hit", rid=req.rid,
+                             shared_pages=plan.shared, full=True)
+            else:
+                tok0, row_cache = rep.prefill(req.prompt)
+                pool.write_prefill(row, row_cache)
+                pool.register_prefix(row, req.prompt, tok0)
+                if plan.shared:
+                    self._record("prefix_hit", rid=req.rid,
+                                 shared_pages=plan.shared, full=False)
+            self._first_token(rep, req, row, tok0)
+            admitted += 1
+
+    def _first_token(self, rep: Replica, req, slot: int, tok0: int) -> None:
+        self.scheduler.start_decode(req, tok0)
+        req.t_first_token = time.perf_counter()
+        self.obs.registry.histogram("serve.ttft_ms").observe(
+            (req.t_first_token - req.t_submit) * 1e3)
+        if req.retries > 0:
+            # a drained request's retry produced its first client-
+            # visible token: the failover incident is repaired
+            self._record("retry_first_token", rid=req.rid,
+                         retries=req.retries)
+        if req.remaining == 0:           # max_new_tokens == 1
+            self._finish(rep, req, slot)
 
     def _decode(self, rep: Replica) -> None:
         active = rep.pool.active_slots
+        if self.paged and active:
+            # make each active row's write-target page exclusively owned
+            # BEFORE the batched step (allocate growth, copy-on-write a
+            # shared tail).  PageExhausted here means reservation
+            # accounting was bypassed — drain the stream back to the
+            # queue as a PLANNED requeue (no retry burned, no incident)
+            for row in list(active):
+                req = self.scheduler.requests[rep.pool.owner(row)]
+                try:
+                    rep.pool.ensure_writable(row)
+                except PageExhausted:
+                    rep.pool.release(row)
+                    self.scheduler.requeue(req, planned=True)
+                    self._record("page_requeue", rid=req.rid, row=row)
+                    self.obs.registry.counter("serve.page_requeues").inc()
+            active = rep.pool.active_slots
         if not active:
             return
-        last = np.zeros((self.fns.num_slots,), np.int32)
+        last = np.zeros((self.fns.num_rows,), np.int32)
         for slot in active:
             req = self.scheduler.requests[rep.pool.owner(slot)]
             assert req.state == DECODE, (req.rid, req.state)
@@ -375,6 +497,8 @@ class ServeEngine:
         self.obs.registry.counter("serve.tokens").inc(len(active))
         for slot in active:
             req = self.scheduler.requests[rep.pool.owner(slot)]
+            if self.paged:
+                rep.pool.advance(slot)   # this step wrote position len
             done = self.scheduler.append_token(req, int(toks[slot]))
             if done:
                 self._finish(rep, req, slot, now=now)

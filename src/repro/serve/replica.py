@@ -23,7 +23,9 @@ from repro.core.heartbeat import HeartbeatEmitter
 from repro.models import init_cache
 from repro.sdc import DecodeSentinel
 from repro.serve.cache_pool import CachePool
-from repro.train import make_prefill_step, make_serve_decode_step
+from repro.serve.page_table import DEFAULT_PAGE_SIZE, PagedKVCache
+from repro.train import (make_paged_decode_step, make_prefill_step,
+                         make_serve_decode_step)
 
 
 class ServeFns:
@@ -32,31 +34,77 @@ class ServeFns:
     Prefill is B=1 against a fresh cache row (compiled once per distinct
     prompt length); decode is vmapped over the pool's slot axis with the
     pool donated (no per-step cache copy — the same fix satellite-applied
-    to examples/serve_lm.py)."""
+    to examples/serve_lm.py).
+
+    ``paged=True`` swaps the memory stack: replicas get a shared
+    ``PagedKVCache`` pool (serve/page_table.py) of ``num_pages`` pages of
+    ``page_size`` tokens instead of per-slot rows, decode runs ONE
+    batched ``make_paged_decode_step`` over ``max_active`` rows through
+    their page tables (pool donated), and prefill still runs B=1 against
+    a fresh contiguous row whose filled pages are scattered into the
+    pool.  The fresh row is sized to the page-aligned ``cache_len`` so
+    the gathered logical cache matches the contiguous row shape exactly
+    — that is what keeps paged greedy streams bit-identical to the slot
+    pool's (docs/serving.md)."""
 
     def __init__(self, cfg, num_slots: int, max_len: int,
-                 impl: Optional[str] = None):
+                 impl: Optional[str] = None, paged: bool = False,
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 num_pages: Optional[int] = None,
+                 max_active: Optional[int] = None,
+                 prefix_cache: bool = True):
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
+        self.paged = paged
         self.prefill = jax.jit(make_prefill_step(cfg, impl))
-        self.decode = jax.jit(
-            jax.vmap(make_serve_decode_step(cfg, impl),
-                     in_axes=(None, 0, 0)),
-            donate_argnums=(2,))
-        # fresh-row template: functional, never mutated — reused by every
-        # prefill so slot recycling starts from a clean cache row
-        self.fresh_row = init_cache(cfg, 1, max_len)
+        if paged:
+            self.page_size = page_size
+            self.pages_per_row = -(-max_len // page_size)
+            self.cache_len = self.pages_per_row * page_size
+            # default pool = the slot pool's memory budget, repaged
+            # (+1 for the reserved null page): equal-memory comparisons
+            # come out of the box
+            self.num_pages = (num_pages if num_pages is not None
+                              else num_slots * self.cache_len // page_size
+                              + 1)
+            self.max_active = (max_active if max_active is not None
+                               else num_slots)
+            self.prefix_cache = prefix_cache
+            self.paged_decode = jax.jit(make_paged_decode_step(cfg, impl),
+                                        donate_argnums=(2,))
+            self.fresh_row = init_cache(cfg, 1, self.cache_len)
+        else:
+            self.decode = jax.jit(
+                jax.vmap(make_serve_decode_step(cfg, impl),
+                         in_axes=(None, 0, 0)),
+                donate_argnums=(2,))
+            # fresh-row template: functional, never mutated — reused by
+            # every prefill so slot recycling starts from a clean row
+            self.fresh_row = init_cache(cfg, 1, max_len)
+
+    @property
+    def num_rows(self) -> int:
+        """Rows the decode step advances per call (pool width)."""
+        return self.max_active if self.paged else self.num_slots
+
+    def make_pool(self, registry=None):
+        if self.paged:
+            return PagedKVCache(self.cfg, self.num_pages, self.page_size,
+                                self.cache_len, self.max_active,
+                                prefix=self.prefix_cache, registry=registry)
+        return CachePool(self.cfg, self.num_slots, self.max_len)
 
 
 class Replica:
     def __init__(self, replica_id: int, params: Any, fns: ServeFns,
                  sentinel: Optional[DecodeSentinel] = None,
-                 hosts: Optional[Sequence[int]] = None):
+                 hosts: Optional[Sequence[int]] = None,
+                 registry=None):
         self.id = replica_id
         self.params = params
         self.fns = fns
-        self.pool = CachePool(fns.cfg, fns.num_slots, fns.max_len)
+        self.pool = fns.make_pool(registry=registry)
         self.sentinel = sentinel
         # a mesh-aware replica spans several hosts (a tp group sharded over
         # them): one heartbeat identity PER host, and the replica fails as
@@ -106,14 +154,24 @@ class Replica:
 
     def decode(self, last_tokens) -> Tuple[Any, Dict[str, Any]]:
         """One decode step over the WHOLE pool (fixed shape, one compile):
-        ``last_tokens`` is (num_slots,) int32 — the previous token per
-        slot, arbitrary for inactive slots (their outputs are ignored).
-        Returns (tokens (num_slots,), stats with per-slot nonfinite and
-        entropy)."""
-        batch = {"tokens": jnp.asarray(last_tokens, jnp.int32)
-                 .reshape(self.fns.num_slots, 1, 1)}
-        toks, self.pool.cache, stats = self.fns.decode(
-            self.params, batch, self.pool.cache)
+        ``last_tokens`` is (num_rows,) int32 — the previous token per
+        row, arbitrary for inactive rows (their outputs are ignored).
+        Returns (tokens (num_rows,), stats with per-row nonfinite and
+        entropy).  Paged pools advance every row through their page
+        tables in one batched call; slot pools vmap over per-slot rows."""
+        if self.fns.paged:
+            pool = self.pool
+            batch = {"tokens": jnp.asarray(last_tokens, jnp.int32)
+                     .reshape(self.fns.max_active, 1),
+                     "lengths": jnp.asarray(pool.lengths),
+                     "page_tables": jnp.asarray(pool.page_tables)}
+            toks, pool.pages, stats = self.fns.paged_decode(
+                self.params, batch, pool.pages)
+        else:
+            batch = {"tokens": jnp.asarray(last_tokens, jnp.int32)
+                     .reshape(self.fns.num_slots, 1, 1)}
+            toks, self.pool.cache, stats = self.fns.decode(
+                self.params, batch, self.pool.cache)
         self.steps += 1
         return (jax.device_get(toks).reshape(-1),
                 jax.device_get(stats))

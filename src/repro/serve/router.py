@@ -40,11 +40,13 @@ class ReplicaRouter:
                  heartbeat_period: float = 0.05,
                  sentinel_factory: Optional[Callable[[], DecodeSentinel]]
                  = None,
-                 hosts_per_replica: int = 1):
+                 hosts_per_replica: int = 1,
+                 registry=None):
         self.fns = fns
         self.monitor = monitor
         self.heartbeat_period = heartbeat_period
         self.sentinel_factory = sentinel_factory
+        self.registry = registry             # metrics for paged pools
         self.hosts_per_replica = max(int(hosts_per_replica), 1)
         self.replicas: Dict[int, Replica] = {}
         self._standby_sources: List[Callable[[], object]] = []
@@ -97,7 +99,8 @@ class ReplicaRouter:
         self._next_host += k
         sentinel = (self.sentinel_factory() if self.sentinel_factory
                     else None)
-        rep = Replica(rid, params, self.fns, sentinel=sentinel, hosts=hosts)
+        rep = Replica(rid, params, self.fns, sentinel=sentinel, hosts=hosts,
+                      registry=self.registry)
         self.replicas[rid] = rep
         for h in hosts:
             self._host_to_rid[h] = rid

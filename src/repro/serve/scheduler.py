@@ -105,6 +105,15 @@ class Scheduler:
     def pending(self) -> int:
         return len(self._queue)
 
+    def peek_queued(self) -> Optional[Request]:
+        """Front of the queue WITHOUT popping — page-aware admission must
+        inspect the request's size (prompt + worst-case decode growth)
+        before committing pages to it; a pop-then-push-back would reorder
+        the FIFO against later requeues."""
+        if not self._queue:
+            return None
+        return self.requests[self._queue[0]]
+
     def pop_queued(self) -> Optional[Request]:
         """Next request to prefill (FIFO), or None when the queue is empty.
         The caller must immediately transition it with ``start_prefill`` —
@@ -146,7 +155,7 @@ class Scheduler:
         req.slot = None
         req.replica = None
 
-    def requeue(self, req: Request) -> None:
+    def requeue(self, req: Request, planned: bool = False) -> None:
         """Drain a request off a dead/corrupt replica back to the queue.
 
         Partial output is discarded — greedy decode is a pure function of
@@ -154,10 +163,17 @@ class Scheduler:
         requests go to the FRONT of the queue (they have already waited
         once).  Each call PREPENDS, so a caller requeuing a drained batch
         must walk it in reverse to keep the batch in slot order at the
-        queue front (see ServeEngine._fail)."""
+        queue front (see ServeEngine._fail).
+
+        ``planned=True`` marks a scheduler-initiated drain (page
+        exhaustion under paging) rather than a failure: the request does
+        not burn retry budget — a stream must never FAIL because the
+        engine chose to requeue it — but it still counts in
+        ``retried_rids`` so drain accounting stays monotonic."""
         if req.state not in (PREFILL, DECODE):
             raise ValueError(f"request {req.rid} not in flight ({req.state})")
-        req.retries += 1
+        if not planned:
+            req.retries += 1
         self.retried_rids.append(req.rid)
         # the pre-failure first token was discarded with the partial
         # output: leaving its timestamp in place would make a retried

@@ -1,7 +1,8 @@
 from repro.train.state import TrainState, init_state
 from repro.train.step import make_train_step, loss_fn
 from repro.train.serve import (make_prefill_step, make_decode_step,
-                               make_serve_decode_step, logit_stats)
+                               make_serve_decode_step,
+                               make_paged_decode_step, logit_stats)
 
 __all__ = [
     "TrainState",
@@ -11,5 +12,6 @@ __all__ = [
     "make_prefill_step",
     "make_decode_step",
     "make_serve_decode_step",
+    "make_paged_decode_step",
     "logit_stats",
 ]

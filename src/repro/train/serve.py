@@ -82,3 +82,25 @@ def make_serve_decode_step(cfg: ModelConfig,
         return next_tok, cache, logit_stats(cfg, last)
 
     return decode_step
+
+
+def make_paged_decode_step(cfg: ModelConfig,
+                           impl: Optional[str] = None) -> Callable:
+    """One decode step for the block-paged serving pool
+    (serve/page_table.py): every pool row advances one token against the
+    SHARED page pool through its page table, in one batched call — no
+    vmap over per-slot caches.
+
+    batch: ``tokens`` (R, 1) last emitted token per row, ``lengths`` (R,)
+    the query position per row, ``page_tables`` (R, MPR) int32.  Inactive
+    rows carry a zeroed table + length 0 and only ever touch the null
+    page; their outputs are discarded by the engine."""
+    def paged_decode_step(params, batch, pages):
+        logits, pages, _ = forward(cfg, params, batch, mode="paged_decode",
+                                   cache=pages, impl=impl)
+        logits = _mask_pad_vocab(cfg, logits.astype(jnp.float32))
+        last = logits[:, -1]
+        next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return next_tok, pages, logit_stats(cfg, last)
+
+    return paged_decode_step

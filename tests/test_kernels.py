@@ -326,3 +326,71 @@ def test_block_hash_checksum_is_sum_of_block_hashes():
     # the identity holds at every (matching) block size
     h256 = np.asarray(block_hashes(x, 256))
     assert int(h256.sum(dtype=np.uint32)) == checksum_np(np.asarray(x), 256)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (serve memory stack, docs/serving.md)
+# ---------------------------------------------------------------------------
+
+def _paged_case(key, R, H, K, hd, ps, mpr, dtype, num_pages):
+    """Random pool + tables: each row maps ``mpr`` distinct live pages
+    (none the null page 0); lengths land in every page, including the
+    last page's final slot (the fully-dead-trailing-page path falls out
+    of short lengths)."""
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (R, 1, H, hd), dtype)
+    k_pages = jax.random.normal(ks[1], (num_pages, ps, K, hd), dtype)
+    v_pages = jax.random.normal(ks[2], (num_pages, ps, K, hd), dtype)
+    perm = jax.random.permutation(ks[3], jnp.arange(1, num_pages))
+    page_tables = perm[: R * mpr].reshape(R, mpr).astype(jnp.int32)
+    lengths = (jnp.arange(R, dtype=jnp.int32) * 7) % (mpr * ps)
+    lengths = lengths.at[-1].set(mpr * ps - 1)     # full table in play
+    lengths = lengths.at[0].set(0)                 # single-position row
+    return q, k_pages, v_pages, page_tables, lengths
+
+
+@pytest.mark.parametrize("R,H,K,hd,ps,mpr", [
+    (4, 4, 4, 32, 16, 4),    # MHA
+    (3, 8, 2, 64, 16, 2),    # GQA 4:1
+    (5, 4, 1, 64, 8, 3),     # MQA, small pages
+])
+@pytest.mark.parametrize("window,softcap", [
+    (0, 0.0), (24, 0.0), (0, 30.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_kernel_sweep(R, H, K, hd, ps, mpr, window,
+                                      softcap, dtype):
+    """Pallas page-table-chasing kernel vs the gather oracle, across
+    head groupings, page sizes, windows, and softcap."""
+    from repro.kernels.paged_attention.ops import paged_decode_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+
+    num_pages = R * mpr + 3
+    q, kp, vp, pt, ln = _paged_case(KEY, R, H, K, hd, ps, mpr, dtype,
+                                    num_pages)
+    out = paged_decode_attention(q, kp, vp, pt, ln, window=window,
+                                 softcap=softcap, impl="pallas",
+                                 interpret=True)
+    ref = paged_attention_ref(q[:, 0], kp, vp, pt, ln, window=window,
+                              softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("window", [0, 12])
+def test_paged_attention_ref_impl_matches_oracle(window):
+    """The production ``impl="ref"`` path (gather + the slot pool's exact
+    decode_mha graph) agrees with the standalone oracle — the bridge that
+    ties kernel sweeps to the engine's bit-identity contract."""
+    from repro.kernels.paged_attention.ops import paged_decode_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+
+    q, kp, vp, pt, ln = _paged_case(KEY, 4, 4, 2, 32, 8, 3, jnp.float32,
+                                    4 * 3 + 2)
+    out = paged_decode_attention(q, kp, vp, pt, ln, window=window,
+                                 impl="ref")
+    ref = paged_attention_ref(q[:, 0], kp, vp, pt, ln, window=window)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                               atol=2e-6, rtol=2e-6)

@@ -1,0 +1,430 @@
+"""Block-paged KV cache: allocator/refcount invariants, paged-vs-slot
+bit-identity, prefix sharing, and the high-concurrency failover E2E
+(docs/serving.md, "Paged KV cache").
+
+The contracts under test:
+
+- the paged engine's greedy streams are bit-identical to the legacy slot
+  pool's (and therefore to the B=1 oracle) across arrival orders — the
+  failover determinism guarantee survives the memory-stack swap;
+- page accounting is conserved through every lifecycle edge: admission
+  reservations, decode growth, copy-on-write, ``release``/``release_all``
+  drains, and planned requeues — no leak, no double-free;
+- prefix sharing is transparent: a sharer finishing (or its replica
+  dying) mid-decode never perturbs the surviving stream.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.chaos import (Scenario, ServeScenarioDriver, check_conservation,
+                         check_monotonic_drain, check_page_conservation,
+                         check_token_identical, check_zero_drop, verify)
+from repro.models import get_config, init_params
+from repro.serve import (PagedKVCache, PageExhausted, Scheduler, ServeEngine)
+
+CFG = get_config("granite-3-8b", tiny=True)
+KEY = jax.random.PRNGKey(0)
+MAX_LEN = 32
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCENARIOS = os.path.join(ROOT, "scenarios")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, KEY)
+
+
+def _prompts(n, lens=(4, 6, 8, 5, 7, 4, 9, 6)):
+    return [list(range(5 + i, 5 + i + lens[i % len(lens)]))
+            for i in range(n)]
+
+
+def _reference_streams(params, prompts, gen, max_len=MAX_LEN):
+    from repro.models import init_cache
+    from repro.train import make_decode_step, make_prefill_step
+    import jax.numpy as jnp
+    prefill = jax.jit(make_prefill_step(CFG))
+    decode = jax.jit(make_decode_step(CFG))
+    out = []
+    for p in prompts:
+        toks = jnp.asarray(p, jnp.int32)[None]
+        tok, row = prefill(params, {"tokens": toks},
+                           init_cache(CFG, 1, max_len))
+        s = [int(tok[0])]
+        for _ in range(gen - 1):
+            tok, row = decode(params, {"tokens": tok[:, None]}, row)
+            s.append(int(tok[0]))
+        out.append(s)
+    return out
+
+
+def _pool(num_pages=9, page_size=4, cache_len=16, max_active=4,
+          prefix=False):
+    return PagedKVCache(CFG, num_pages=num_pages, page_size=page_size,
+                        cache_len=cache_len, max_active=max_active,
+                        prefix=prefix)
+
+
+# ---------------------------------------------------------------------------
+# allocator: admission, reservations, growth
+# ---------------------------------------------------------------------------
+
+def test_pool_admission_reserves_worst_case_growth():
+    """A request is admitted only when the pool covers its prompt pages
+    AND its worst-case decode tail — so decode can never strand an
+    admitted stream on an empty free list."""
+    pool = _pool()                       # 8 usable pages (page 0 = null)
+    prompt = [1] * 6                     # 2 prompt pages at ps=4
+    # worst case: ceil((6 + 4 - 1) / 4) = 3 pages -> reserve 1 for growth
+    assert pool.can_admit(prompt, 4)
+    row, plan = pool.acquire(1, prompt, 4)
+    assert plan.new == 2 and plan.reserved == 1 and not plan.skip_prefill
+    assert pool.free_pages == 6 and pool.available() == 5
+    pool.acquire(2, [1] * 6, 4)
+    assert pool.available() == 2
+    # a third identical request needs 2 + 1 > 2 available: gated out even
+    # though 4 pages sit on the free list — they are spoken for
+    assert pool.free_pages == 4
+    assert not pool.can_admit([1] * 6, 4)
+    ok, detail = pool.audit()
+    assert ok, detail
+
+
+def test_pool_decode_growth_consumes_reservation():
+    pool = _pool()
+    row, plan = pool.acquire(1, [1] * 6, 4)
+    # prompt wrote positions 0..5; decode writes land at 6, 7, 8 — the
+    # first two stay inside prompt page 1, position 8 grows into page 2
+    assert pool.ensure_writable(row) is None       # pos 6: owned page
+    pool.advance(row)
+    assert pool.ensure_writable(row) is None       # pos 7
+    pool.advance(row)
+    assert pool.available() == pool.free_pages - 1
+    assert pool.ensure_writable(row) == "grow"     # pos 8: null -> alloc
+    assert pool.available() == pool.free_pages     # reservation consumed
+    ok, detail = pool.audit()
+    assert ok, detail
+
+
+def test_pool_growth_past_table_raises_page_exhausted():
+    pool = _pool(cache_len=8)            # 2-page tables at ps=4
+    row, _ = pool.acquire(1, [1] * 6, 3)
+    pool.lengths[row] = 8                # next write past the table
+    with pytest.raises(PageExhausted):
+        pool.ensure_writable(row)
+
+
+def test_pool_release_returns_every_page_no_double_free():
+    pool = _pool()
+    row, _ = pool.acquire(7, [1] * 6, 4)
+    pool.advance(row); pool.advance(row)
+    pool.ensure_writable(row)            # grow: 3 pages held now
+    assert pool.free_pages == 5
+    assert pool.release(row) == 7
+    assert pool.free_pages == 8 and pool.available() == 8
+    assert pool.active_slots == [] and pool.free_count == 4
+    with pytest.raises(ValueError):
+        pool.release(row)                # double release is a caller bug
+    ok, detail = pool.audit()
+    assert ok, detail
+
+
+def test_pool_release_all_drains_in_row_order():
+    """The drain contract failover depends on: ``release_all`` returns
+    rids in row (= admission) order, every page returns to the free list,
+    and the drain report carries the page tables the retried streams
+    held."""
+    pool = _pool(num_pages=17)
+    for rid in (7, 8, 9):
+        pool.acquire(rid, [1] * 6, 4)
+    assert pool.release_all() == [7, 8, 9]
+    assert pool.free_pages == 16 and pool.free_count == 4
+    assert pool.last_drain is not None
+    assert [r["rid"] for r in pool.last_drain["rows"]] == [7, 8, 9]
+    assert all(len(r["pages"]) == 2 for r in pool.last_drain["rows"])
+    # the pool is reusable from a clean slate after the drain
+    row, _ = pool.acquire(10, [2] * 4, 2)
+    assert pool.owner(row) == 10
+    ok, detail = pool.audit()
+    assert ok, detail
+
+
+# ---------------------------------------------------------------------------
+# prefix cache: refcounts, sharing, copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_prefix_exact_repeat_skips_prefill_with_stored_token():
+    pool = _pool(num_pages=17, prefix=True)
+    prompt = list(range(8))              # page-aligned at ps=4
+    row, plan = pool.acquire(1, prompt, 3)
+    assert not plan.skip_prefill
+    pool.register_prefix(row, prompt, first_token=42)
+    row2, plan2 = pool.acquire(2, prompt, 3)
+    assert plan2.skip_prefill and plan2.first_token == 42
+    assert plan2.shared == 2 and plan2.new == 0
+    # both rows map the same physical pages, each held 3x (2 rows + entry)
+    assert (pool.page_tables[row, :2] == pool.page_tables[row2, :2]).all()
+    for p in pool.page_tables[row, :2]:
+        assert pool._refs[int(p)] == 3
+    assert pool.prefix_hits == 1 and pool.prefix_misses == 1
+    ok, detail = pool.audit()
+    assert ok, detail
+
+
+def test_prefix_unaligned_tail_copy_on_write():
+    """An unaligned shared tail page must be copy-on-written before the
+    sharer's first decode token lands in it — covered by the reservation's
+    CoW allowance, never by luck."""
+    pool = _pool(num_pages=17, prefix=True)
+    prompt = list(range(6))              # tail page holds positions 4..5
+    row, plan = pool.acquire(1, prompt, 4)
+    assert plan.reserved == 2            # growth tail + CoW allowance
+    pool.register_prefix(row, prompt, first_token=9)
+    tail = int(pool.page_tables[row, 1])
+    assert pool._refs[tail] == 2         # row + full-prompt entry
+    assert pool.ensure_writable(row) == "cow"      # pos 6 shares the tail
+    assert int(pool.page_tables[row, 1]) != tail
+    assert pool._refs[tail] == 1 and pool.cow_copies == 1
+    ok, detail = pool.audit()
+    assert ok, detail
+
+
+def test_prefix_refcounts_survive_sharer_release_and_drain():
+    pool = _pool(num_pages=17, prefix=True)
+    prompt = list(range(8))
+    row, _ = pool.acquire(1, prompt, 2)
+    pool.register_prefix(row, prompt, first_token=3)
+    row2, _ = pool.acquire(2, prompt, 2)
+    pool.release(row)                    # one sharer leaves mid-flight
+    for p in pool.page_tables[row2, :2]:
+        assert pool._refs[int(p)] == 2   # surviving row + entry
+    ok, detail = pool.audit()
+    assert ok, detail
+    pool.release(row2)
+    # pages persist under the (idle) entry until eviction or drain
+    assert pool.conservation()["pages_held"] == 2
+    assert pool.release_all() == []      # empty drain still drops entries
+    assert pool.free_pages == 16
+
+
+def test_prefix_eviction_reclaims_idle_entries_for_admission():
+    pool = _pool(num_pages=9, cache_len=32, prefix=True)  # 8 usable pages
+    prompt = list(range(8))
+    row, _ = pool.acquire(1, prompt, 2)        # 2 pages, no reservation
+    pool.register_prefix(row, prompt, first_token=3)
+    pool.release(row)
+    assert pool.available() == 6 and pool._reclaimable() == 2
+    # 5 prompt pages + 2 reserved only fit by evicting the idle entry
+    big = list(range(100, 118))
+    assert pool.can_admit(big, 4)
+    row2, plan = pool.acquire(2, big, 4)
+    assert plan.new == 5 and plan.reserved == 2
+    assert len(pool._prefix) == 0              # LRU victim evicted
+    ok, detail = pool.audit()
+    assert ok, detail
+
+
+# ---------------------------------------------------------------------------
+# scheduler: planned requeue (page exhaustion is not an incident)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_planned_requeue_burns_no_retry():
+    """A page-exhaustion drain is the ENGINE's choice, not a failure of
+    the stream — it must never consume the request's retry budget (a
+    stream could otherwise FAIL without any replica ever dying), but it
+    still counts in the drained-request accounting."""
+    s = Scheduler(max_retries=0)         # any real retry would FAIL
+    r = s.submit([1, 2], 4)
+    s.pop_queued()
+    s.start_prefill(r, 0, 0)
+    s.start_decode(r, 7)
+    s.requeue(r, planned=True)
+    assert r.state == "QUEUED" and r.retries == 0
+    assert s.retried_rids[-1] == r.rid   # monotonic drain accounting
+    assert s.pop_queued() is r           # back at the queue front
+
+
+# ---------------------------------------------------------------------------
+# engine: paged vs slot-pool bit-identity
+# ---------------------------------------------------------------------------
+
+def test_paged_streams_bit_identical_to_slot_pool_any_order(params):
+    """The tentpole determinism contract: the paged engine's greedy
+    streams equal the legacy slot pool's token for token, across arrival
+    orders — same model, same memory budget, different memory stack."""
+    prompts = _prompts(6)
+    gen = 5
+
+    def run(paged, order):
+        eng = ServeEngine(CFG, params, num_replicas=1,
+                          slots_per_replica=3, max_len=MAX_LEN,
+                          fault_tolerant=False, paged=paged)
+        rids = {eng.submit(prompts[i], gen): i for i in order}
+        res = eng.run()
+        if paged:
+            for rep in eng.router.replicas.values():
+                ok, detail = rep.pool.audit()
+                assert ok, detail
+        eng.shutdown()
+        return {i: res[rid] for rid, i in rids.items()}
+
+    legacy = run(False, [0, 1, 2, 3, 4, 5])
+    assert run(True, [0, 1, 2, 3, 4, 5]) == legacy
+    assert run(True, [5, 3, 1, 0, 2, 4]) == legacy
+
+
+def test_paged_prefix_sharing_streams_stay_bit_identical(params):
+    """Prefix sharing is a pure memory optimization: prompts sharing an
+    aligned 16-token prefix (and exact repeats, which skip prefill) must
+    produce the same streams as the B=1 oracle, with hits recorded."""
+    base = list(range(3, 19))            # one full page at ps=16
+    prompts = [base + [21, 22], base + [33], list(base), list(base)]
+    gen = 4
+    ref = _reference_streams(params, prompts, gen)
+    eng = ServeEngine(CFG, params, num_replicas=1, slots_per_replica=4,
+                      max_len=MAX_LEN, fault_tolerant=False, paged=True,
+                      num_pages=64)
+    rids = [eng.submit(p, gen) for p in prompts]
+    res = eng.run()
+    pool = eng.router.replicas[0].pool
+    hits = [e for e in eng.events if e["event"] == "prefix_hit"]
+    full_hits = [e for e in hits if e.get("full")]
+    assert pool.prefix_hits >= 3, "sharers + exact repeat must all hit"
+    assert full_hits, "the exact repeat must skip prefill entirely"
+    ok, detail = pool.audit()
+    assert ok, detail
+    eng.shutdown()
+    for rid, r in zip(rids, ref):
+        assert res[rid] == r
+
+
+def test_prefix_sharer_finishing_mid_decode_leaves_stream_intact(params):
+    """One sharer releases its pages mid-decode of the other: the
+    surviving stream must not notice (its shared pages were CoW'd or
+    refcounted, never freed under it) and accounting must stay clean."""
+    prompt = list(range(2, 22))          # unaligned: shared tail page
+    gen_long, gen_short = 8, 2
+    ref = _reference_streams(params, [prompt, prompt],
+                             gen_long)[0]
+    eng = ServeEngine(CFG, params, num_replicas=1, slots_per_replica=4,
+                      max_len=MAX_LEN, fault_tolerant=False, paged=True,
+                      num_pages=64)
+    pool = eng.router.replicas[0].pool
+    rid_long = eng.submit(prompt, gen_long)
+    rid_short = eng.submit(prompt, gen_short)    # exact-repeat sharer
+    while not eng.scheduler.all_done():
+        eng.step()
+        ok, detail = pool.audit()
+        assert ok, f"mid-decode accounting drift: {detail}"
+    res = eng.results()
+    assert pool.prefix_hits >= 1 and pool.cow_copies >= 1
+    eng.shutdown()
+    assert res[rid_long] == ref
+    assert res[rid_short] == ref[:gen_short]
+
+
+def test_paged_requeues_on_page_exhaustion_without_dropping(params):
+    """Starve the pool so streams must wait: every submitted request
+    still completes with an oracle stream (admission defers, planned
+    requeues burn no retries, nothing FAILs)."""
+    prompts = _prompts(5)
+    gen = 5
+    ref = _reference_streams(params, prompts, gen)
+    # 5 usable pages: at most two 2-page streams + reservations in flight
+    eng = ServeEngine(CFG, params, num_replicas=1, slots_per_replica=4,
+                      max_len=MAX_LEN, fault_tolerant=False, paged=True,
+                      page_size=4, num_pages=6, prefix_cache=False)
+    rids = [eng.submit(p, gen) for p in prompts]
+    res = eng.run()
+    pool = eng.router.replicas[0].pool
+    ok, detail = pool.audit()
+    assert ok, detail
+    assert eng.scheduler.failed_rids == []
+    eng.shutdown()
+    for rid, r in zip(rids, ref):
+        assert res[rid] == r
+
+
+def test_paged_rejected_for_unpageable_stack(params):
+    """paged=True on a decode stack with non-attention state must fail
+    loudly at construction, and the auto default must fall back to the
+    slot pool."""
+    ssm = get_config("falcon-mamba-7b", tiny=True)
+    sparams = init_params(ssm, KEY)
+    with pytest.raises(ValueError, match="page"):
+        ServeEngine(ssm, sparams, max_len=16, paged=True)
+    eng = ServeEngine(ssm, sparams, max_len=16)      # auto: legacy pool
+    assert not eng.paged
+    eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# E2E: flash crowd at 100+ concurrent streams + replica kill mid-spike
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_e2e_flash_crowd_paged_replica_kill(params):
+    """The acceptance scenario (scenarios/flash_crowd_paged.json): a 16x
+    traffic spike pushes the paged engine past 100 concurrent streams —
+    far beyond any slot pool at this memory budget — then one replica
+    dies mid-spike.  Zero admitted requests drop, every retried stream is
+    token-identical to the B=1 oracle, and page conservation holds at
+    every engine step across the kill and drain."""
+    sc = Scenario.from_json(os.path.join(SCENARIOS,
+                                         "flash_crowd_paged.json"))
+    eng = ServeEngine(CFG, params, num_replicas=2, slots_per_replica=4,
+                      max_len=MAX_LEN, fault_tolerant=True,
+                      heartbeat_period=0.05, heartbeat_timeout_factor=40.0,
+                      max_pending=512, max_prefill_per_step=16,
+                      paged=True, max_active=64, num_pages=200)
+    drv = ServeScenarioDriver(eng, sc, base_rate=1, prompt_len=8,
+                              max_new_tokens=16)
+    results = drv.run()
+    rep = drv.report()
+    samples = drv.samples
+    page_samples = drv.page_samples
+    retried = sorted(set(eng.scheduler.retried_rids))
+    failures = [e for e in eng.events if e["event"] == "replica_failed"]
+    sched = eng.scheduler
+
+    assert failures and failures[0]["replica"] == 1
+    assert "pages_drained" in failures[0]      # page tables in the drain
+    assert retried, "the mid-spike kill must have drained in-flight work"
+    assert rep["rejected"] == 0                # max_pending absorbed it
+    peak = max(s["in_flight"] for s in samples)
+    assert peak >= 100, (f"spike peaked at {peak} concurrent streams; "
+                         "the paged pool must sustain 100+")
+
+    # oracle the streams failover touched (plus a control sample): the
+    # full ~200-request set would dominate the test's runtime for no
+    # additional coverage
+    check_rids = retried + [r for r in drv.submitted_rids[:8]
+                            if r not in retried]
+    ref = {rid: s for rid, s in zip(
+        check_rids,
+        _reference_streams(params, [drv.prompts[r] for r in check_rids],
+                           drv.max_new_tokens))}
+    verify([check_zero_drop(sched, drv.submitted_rids),
+            check_token_identical({r: results[r] for r in check_rids},
+                                  ref),
+            check_conservation(samples),
+            check_page_conservation(page_samples),
+            check_monotonic_drain(drv.drained_series)])
+    eng.shutdown()
+
+
+def test_flash_crowd_paged_scenario_loads():
+    """The committed trace parses, validates, and spikes while the kill
+    lands inside the spike window (mid-spike is the point)."""
+    with open(os.path.join(SCENARIOS, "flash_crowd_paged.json")) as f:
+        raw = json.load(f)
+    sc = Scenario.from_dict(raw)
+    sc.validate()
+    spike = next(e for e in sc.window_events("traffic_spike"))
+    kill = next(e for e in sc.point_events("kill_hosts"))
+    assert spike.args["mult"] >= 16
+    assert spike.at < kill.at < spike.until
